@@ -1,0 +1,35 @@
+"""Shared benchmark helpers: CSV emission + compact run settings.
+
+Benchmarks default to paper-faithful settings scaled to this CPU
+container (fewer peers/iterations than the paper's 125x several hundred;
+``--full`` restores paper scale). Every module prints
+``name,key=value,...`` CSV rows so ``benchmarks/run.py`` can tee a
+single machine-readable stream.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List
+
+
+def emit(_row: str, **fields):
+    parts = [_row] + [f"{k}={v}" for k, v in fields.items()]
+    print(",".join(parts), flush=True)
+
+
+def std_argparser(desc: str) -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=desc)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow)")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def scale(full: bool) -> Dict[str, int]:
+    """(peers, iterations, eval_every) per mode."""
+    if full:
+        return dict(peers=125, iters=150, eval_every=5, local_batches=1)
+    return dict(peers=27, iters=30, eval_every=5, local_batches=2)

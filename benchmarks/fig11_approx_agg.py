@@ -1,0 +1,38 @@
+"""Fig. 11 — approximate aggregation: smaller groups / fewer-or-more MAR
+rounds trade exactness for communication (up to 33% cheaper at equal
+utility over multiple iterations)."""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit, scale, std_argparser
+from repro.core.federation import FederationConfig, run_federation
+
+
+def main(argv=None) -> int:
+    ap = std_argparser(__doc__)
+    args = ap.parse_args(argv)
+    s = scale(args.full)
+
+    # paper setting at 125 peers: (5, 3 rounds) exact vs (3, 4 rounds)
+    settings = [(5, None, "exact_5^3"), (3, 4, "approx_3x4"),
+                (3, 3, "approx_3x3")] if args.full or s["peers"] == 125 \
+        else [(3, None, "exact_3^3"), (3, 2, "approx_3x2"),
+              (3, 1, "approx_3x1")]
+
+    for gsize, rounds, label in settings:
+        cfg = FederationConfig(
+            n_peers=s["peers"], technique="mar", task="text",
+            group_size=gsize, mar_rounds=rounds,
+            local_batches=s["local_batches"], seed=args.seed)
+        hist = run_federation(cfg, s["iters"], eval_every=s["eval_every"])
+        emit("fig11_approx", setting=label, group_size=gsize,
+             rounds=(rounds if rounds else "exact"),
+             final_acc=round(hist["accuracy"][-1], 4),
+             comm_mb=round(hist["comm_bytes"][-1] / 1e6, 1),
+             disagreement=f"{hist['disagreement'][-1]:.2e}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,46 @@
+"""Fig. 1 — performance gap: communication to reach a target accuracy.
+
+Trains MAR-FL / FedAvg / RDFL / AR-FL on the text task and reports
+bytes-to-target-accuracy plus the per-iteration byte model across peer
+counts (the paper's 'up to 10x less communication than RDFL/AR-FL').
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit, scale, std_argparser
+from repro.core import topology
+from repro.core.federation import FederationConfig, run_federation
+from repro.core.moshpit import plan_grid
+
+
+def main(argv=None) -> int:
+    ap = std_argparser(__doc__)
+    ap.add_argument("--target", type=float, default=0.30)
+    args = ap.parse_args(argv)
+    s = scale(args.full)
+
+    # analytic scaling table (exact Fig. 1 curves)
+    for row in topology.complexity_table(
+            model_bytes=10_000_000, peer_counts=(16, 64, 125, 512, 4096)):
+        emit("fig1_scaling", **row)
+
+    # trained comm-to-accuracy
+    for tech in ("fedavg", "mar", "rdfl", "ar"):
+        cfg = FederationConfig(
+            n_peers=s["peers"], technique=tech, task="text",
+            local_batches=s["local_batches"], seed=args.seed)
+        hist = run_federation(cfg, s["iters"], eval_every=s["eval_every"])
+        reached = next((c for a, c in zip(hist["accuracy"],
+                                          hist["comm_bytes"])
+                        if a >= args.target), None)
+        emit("fig1_train", technique=tech, peers=s["peers"],
+             final_acc=round(hist["accuracy"][-1], 4),
+             comm_mb=round(hist["comm_bytes"][-1] / 1e6, 1),
+             mb_to_target=(round(reached / 1e6, 1)
+                           if reached else "not_reached"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""Fig. 2 / Fig. 9 — MKD: communication to reach target accuracy with and
+without Moshpit-KD (text = 20NG analogue; --task vision = MNIST)."""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit, scale, std_argparser
+from repro.core.federation import FederationConfig, run_federation
+
+
+def main(argv=None) -> int:
+    ap = std_argparser(__doc__)
+    ap.add_argument("--task", default="text", choices=["text", "vision"])
+    ap.add_argument("--target", type=float, default=0.30)
+    args = ap.parse_args(argv)
+    s = scale(args.full)
+
+    for use_kd, kd_iters in ((False, 0), (True, 6), (True, 12)):
+        cfg = FederationConfig(
+            n_peers=s["peers"], technique="mar", task=args.task,
+            batch_size=64 if args.task == "vision" else 16,
+            local_batches=s["local_batches"],
+            use_kd=use_kd, kd_iterations=kd_iters, seed=args.seed)
+        hist = run_federation(cfg, s["iters"], eval_every=s["eval_every"])
+        reached = next((c for a, c in zip(hist["accuracy"],
+                                          hist["comm_bytes"])
+                        if a >= args.target), None)
+        emit("fig2_mkd", task=args.task, use_kd=use_kd, kd_iters=kd_iters,
+             final_acc=round(hist["accuracy"][-1], 4),
+             comm_mb=round(hist["comm_bytes"][-1] / 1e6, 1),
+             mb_to_target=(round(reached / 1e6, 1)
+                           if reached else "not_reached"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

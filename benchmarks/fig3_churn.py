@@ -1,0 +1,38 @@
+"""Fig. 3/6/7 — partial participation and network churn.
+
+Sweeps participation rate x dropout likelihood for MAR-FL (and FedAvg as
+the reference pattern): accuracy degrades with participation but is
+robust to dropouts; MAR keeps its communication edge throughout.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit, scale, std_argparser
+from repro.core.federation import FederationConfig, run_federation
+
+
+def main(argv=None) -> int:
+    ap = std_argparser(__doc__)
+    args = ap.parse_args(argv)
+    s = scale(args.full)
+
+    for tech in ("mar", "fedavg"):
+        for part in (1.0, 0.5):
+            for drop in (0.0, 0.2):
+                cfg = FederationConfig(
+                    n_peers=s["peers"], technique=tech, task="text",
+                    participation_rate=part, dropout_rate=drop,
+                    local_batches=s["local_batches"], seed=args.seed)
+                hist = run_federation(cfg, s["iters"],
+                                      eval_every=s["eval_every"])
+                emit("fig3_churn", technique=tech, participation=part,
+                     dropout=drop,
+                     final_acc=round(hist["accuracy"][-1], 4),
+                     comm_mb=round(hist["comm_bytes"][-1] / 1e6, 1),
+                     disagreement=f"{hist['disagreement'][-1]:.2e}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

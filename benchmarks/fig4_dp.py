@@ -1,0 +1,33 @@
+"""Fig. 4/10 — differentially private training: noise multiplier sweep
+with adaptive clipping (Alg. 4) + RDP epsilon estimates."""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit, scale, std_argparser
+from repro.core.dp import epsilon_estimate
+from repro.core.federation import FederationConfig, run_federation
+
+
+def main(argv=None) -> int:
+    ap = std_argparser(__doc__)
+    args = ap.parse_args(argv)
+    s = scale(args.full)
+
+    for sigma in (0.0, 0.1, 0.3, 1.0):
+        cfg = FederationConfig(
+            n_peers=s["peers"], technique="mar", task="text",
+            use_dp=sigma > 0, noise_multiplier=sigma,
+            local_batches=s["local_batches"], seed=args.seed)
+        hist = run_federation(cfg, s["iters"], eval_every=s["eval_every"])
+        eps = (epsilon_estimate(s["iters"], sigma)
+               if sigma > 0 else float("inf"))
+        emit("fig4_dp", noise_multiplier=sigma,
+             final_acc=round(hist["accuracy"][-1], 4),
+             epsilon=(round(eps, 1) if eps != float("inf") else "inf"),
+             comm_mb=round(hist["comm_bytes"][-1] / 1e6, 1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""Fig. 5 — qualitative identity: MAR-FL == FedAvg == AR-FL == RDFL test
+accuracy under exact aggregation (and max param divergence)."""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, scale, std_argparser
+from repro.core.federation import Federation, FederationConfig
+
+
+def main(argv=None) -> int:
+    ap = std_argparser(__doc__)
+    args = ap.parse_args(argv)
+    s = scale(args.full)
+
+    params = {}
+    for tech in ("mar", "fedavg", "ar", "rdfl"):
+        cfg = FederationConfig(n_peers=s["peers"], technique=tech,
+                               task="text",
+                               local_batches=s["local_batches"],
+                               seed=args.seed)
+        fed = Federation(cfg)
+        state = fed.init_state()
+        for _ in range(s["iters"] // 2):
+            state = fed.step(state)
+        acc = fed.evaluate(state)
+        params[tech] = jax.tree.leaves(state.params)[0]
+        emit("fig5_parity", technique=tech, acc=round(acc, 4))
+    base = params["fedavg"]
+    for tech in ("mar", "ar", "rdfl"):
+        d = float(jnp.max(jnp.abs(params[tech] - base)))
+        emit("fig5_divergence", technique=tech, vs="fedavg",
+             max_param_diff=f"{d:.2e}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,67 @@
+"""Format dry-run JSON records into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b >= 2 ** 30:
+        return f"{b/2**30:.1f}G"
+    if b >= 2 ** 20:
+        return f"{b/2**20:.1f}M"
+    return f"{b/2**10:.0f}K"
+
+
+def table(records, mesh_filter=None):
+    rows = []
+    header = ("| arch | shape | mesh | peers | compute_s | memory_s | "
+              "collective_s | dominant | useful | MFU | HBM/chip |")
+    sep = "|" + "---|" * 11
+    rows.append(header)
+    rows.append(sep)
+    for r in records:
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — |"
+                        f" — | skipped (quadratic attn) | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | "
+                        f"{r.get('mesh','?')} | — | — | — | — | "
+                        f"**FAILED** {r.get('error','')[:40]} | — | — | — |")
+            continue
+        if mesh_filter and mesh_filter not in r["mesh"]:
+            continue
+        ma = r.get("memory_per_chip", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{'multi' if 'multi' in r['mesh'] else 'single'} | "
+            f"{r.get('n_peers','—')} | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['useful_flops_fraction']*100:.0f}% | "
+            f"{r['mfu']*100:.1f}% | "
+            f"{ma.get('total_bytes', 0)/2**30:.1f}G |")
+    return "\n".join(rows)
+
+
+def main(argv=None) -> int:
+    path = (argv or sys.argv[1:])[0]
+    with open(path) as f:
+        records = json.load(f)
+    ok = [r for r in records if r.get("status") == "ok"]
+    print(table(records))
+    print()
+    print(f"# {len(ok)} ok / "
+          f"{sum(1 for r in records if r.get('status')=='skipped')} "
+          f"skipped / "
+          f"{sum(1 for r in records if r.get('status') not in ('ok','skipped'))}"
+          f" failed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

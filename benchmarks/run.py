@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run``           — fast settings, all figures
+``python -m benchmarks.run --full``    — paper-scale (125 peers, slow)
+``python -m benchmarks.run --only fig1_perf_gap fig4_dp``
+
+Each module prints ``name,key=value,...`` CSV rows. The roofline table
+(§Roofline) is produced by the dry-run instead:
+``python -m repro.launch.dryrun --all --mesh both --out dryrun.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "fig1_perf_gap",
+    "fig2_mkd",
+    "fig3_churn",
+    "fig4_dp",
+    "fig5_parity",
+    "fig8_noniid",
+    "fig11_approx_agg",
+    "kernel_bench",
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args(argv)
+
+    mods = args.only if args.only else MODULES
+    rc = 0
+    for name in mods:
+        print(f"# ---- {name} ----", flush=True)
+        t0 = time.time()
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        try:
+            rc |= mod.main(["--full"] if args.full else [])
+        except Exception as e:  # keep the harness going; report at end
+            print(f"{name},ERROR={type(e).__name__}: {e}", flush=True)
+            rc |= 1
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Differentially private MAR-FL (Alg. 4): adaptive clipping + noise,
+with the RDP privacy ledger.
+
+    PYTHONPATH=src python examples/private_federation.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.dp import epsilon_estimate
+from repro.core.federation import Federation, FederationConfig
+
+for sigma in (0.1, 0.5):
+    cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                           use_dp=True, noise_multiplier=sigma,
+                           local_batches=2)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    for t in range(15):
+        state = fed.step(state)
+    eps = epsilon_estimate(15, sigma)
+    print(f"sigma={sigma}: acc={fed.evaluate(state):.3f} "
+          f"clip bound C_t={float(state.dp['clip']):.3f} "
+          f"epsilon(delta=1e-5)={eps:.1f}")
+
+print("\nLower sigma -> better utility, higher epsilon; the clipping "
+      "bound C_t adapts toward the gamma=0.5 quantile (Alg. 4 line 17).")

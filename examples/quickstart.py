@@ -1,0 +1,33 @@
+"""Quickstart: train a 27-peer MAR-FL federation on the text task.
+
+Shows the core public API: FederationConfig -> Federation -> step/eval,
+the MAR grid behind it, and the communication ledger.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.federation import Federation, FederationConfig
+
+cfg = FederationConfig(
+    n_peers=27,          # 27 = 3^3 -> exact MAR grid, 3 rounds of size-3
+    technique="mar",
+    task="text",         # 20-class frozen-encoder features (20NG analogue)
+    local_batches=2,     # B local Momentum-SGD steps per FL iteration
+    lr=0.1, momentum=0.9,
+)
+fed = Federation(cfg)
+print(f"MAR grid: {fed.plan.dims} (exact={fed.plan.is_exact}), "
+      f"model bytes={fed.model_bytes:,}")
+
+state = fed.init_state()
+for t in range(20):
+    state = fed.step(state)
+    if (t + 1) % 5 == 0:
+        print(f"iter {t+1:3d}: acc={fed.evaluate(state):.3f} "
+              f"comm={fed.comm_bytes/1e6:,.0f} MB "
+              f"peer-disagreement={fed.peer_disagreement(state):.2e}")
+
+print("\nEvery peer holds the collaboratively trained global model "
+      "(Alg. 1 returns theta^T).")

@@ -1,0 +1,14 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    reduced,
+    shape_applicable,
+)
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS,
+    all_cells,
+    get_config,
+    get_shape,
+    get_smoke_config,
+)

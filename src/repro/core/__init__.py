@@ -1,0 +1,5 @@
+"""MAR-FL core: the paper's contribution as composable JAX modules."""
+from repro.core.moshpit import GridPlan, plan_grid, mesh_grid_plan
+from repro.core.federation import (Federation, FederationConfig,
+                                   FederationState, run_federation)
+from repro.core import mar_allreduce, topology, mixing

@@ -1,0 +1,87 @@
+"""Delta compression for MAR exchanges (beyond-paper; DESIGN.md §5).
+
+Peers exchange model state every iteration; quantizing the *delta since
+the last aggregated state* to int8 cuts MAR wire bytes 4x (vs f32) at
+<1% relative error — and **error feedback** (Seide et al. / EF-SGD)
+carries each peer's quantization residual into its next delta, so the
+bias cancels over iterations instead of accumulating.
+
+Protocol (per FL iteration, sim backend):
+    delta_i   = theta_i - ref_i + e_i          # e_i = residual carry
+    q_i       = Q(delta_i)                     # int8 absmax per tensor
+    e_i'      = delta_i - deQ(q_i)             # new residual
+    exchange  = MAR group means over deQ(q_i)  # wire format: int8+scale
+    theta_i'  = ref' = ref_i + mean(deQ(q))    # all peers re-anchor
+
+``FederationConfig(compress="int8_ef")`` activates it; communication
+accounting divides data-plane bytes by the compression ratio.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+INT8_RATIO = 4.0   # vs f32 wire format (scales are negligible)
+
+
+def quantize_int8(x: Array) -> Tuple[Array, Array]:
+    """Per-tensor absmax int8 quantization (leading peer axis kept)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)),
+                     axis=tuple(range(1, x.ndim)), keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(tree: PyTree, error: Optional[PyTree]
+                  ) -> Tuple[PyTree, PyTree]:
+    """Quantize every leaf (plus carried error); returns (dequantized
+    values as seen on the wire, new error carry)."""
+    def leaf(x, e):
+        xe = x.astype(jnp.float32) + (0.0 if e is None else e)
+        q, s = quantize_int8(xe)
+        deq = dequantize_int8(q, s)
+        return deq, xe - deq
+
+    if error is None:
+        flat, treedef = jax.tree.flatten(tree)
+        outs = [leaf(x, None) for x in flat]
+    else:
+        flat, treedef = jax.tree.flatten(tree)
+        eflat = jax.tree.leaves(error)
+        outs = [leaf(x, e) for x, e in zip(flat, eflat)]
+    deqs = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    errs = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return deqs, errs
+
+
+def compressed_aggregate(aggregate_fn, params: PyTree, momentum: PyTree,
+                         ref: PyTree, error: Optional[PyTree],
+                         a_mask: Array) -> Tuple[PyTree, PyTree, PyTree,
+                                                 PyTree]:
+    """EF-int8 MAR: aggregate quantized deltas against the shared ref.
+
+    Returns (new_params, new_momentum, new_ref, new_error). Momentum is
+    aggregated uncompressed here only in value — its wire bytes are
+    discounted by the same ratio in ``topology`` accounting since the
+    identical protocol applies (kept exact in sim to isolate the theta
+    quantization error in tests).
+    """
+    delta = jax.tree.map(
+        lambda p, r: p.astype(jnp.float32) - r, params, ref)
+    deq, new_error = compress_tree(delta, error)
+    agg = aggregate_fn({"d": deq, "m": momentum}, a_mask)
+    new_ref = jax.tree.map(lambda r, d: r + d, ref, agg["d"])
+    new_params = jax.tree.map(
+        lambda nr, p: nr.astype(p.dtype), new_ref, params)
+    return new_params, agg["m"], new_ref, new_error

@@ -1,0 +1,175 @@
+"""Fully decentralized DP with adaptive clipping (paper Alg. 4, §A.2).
+
+DP-FedAvg with adaptive clipping (Andrew et al., 2021) made serverless:
+each peer clips + noises its *local delta* against its last-known global
+model, smooths it (beta), derives a DP-safe local model, and lets MAR
+average privatized models. The clipping bound tracks a target quantile
+``gamma`` of the *globally averaged* (noised) clipping indicator.
+
+State per peer (leading peer axis):
+  last_global   — theta-bar_i^{t-1}, the peer's last aggregated model
+  smooth_delta  — Delta-bar_i^{t-1}  (bot encoded as has_delta = 0)
+plus the shared scalar clipping bound C_t.
+
+Noise calibration (Alg. 4 lines 1-3, with the paper's average-vs-sum
+rescales): sigma_b = n_t / 20;  z_Delta = (sigma_mult^-2 - (2 sigma_b)^-2)^-1/2;
+sigma_Delta = z_Delta * C_t; per-peer delta noise has variance
+sigma_Delta^2 / n_t; the averaged indicator gets N(0, sigma_b^2) / n_t.
+
+Privacy loss is estimated with Renyi-DP composition for the Gaussian
+mechanism (Mironov, 2017) in :func:`epsilon_estimate`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+BETA = 0.9       # delta smoothing (paper §A.2)
+ETA_U = 0.1      # server-lr analogue
+GAMMA = 0.5      # target clipping quantile
+ETA_C = 0.2      # clipping-bound stepsize
+
+
+def dp_init(params: PyTree, clip_init: float) -> Dict[str, PyTree]:
+    zeros = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+    n = jax.tree.leaves(params)[0].shape[0]
+    return {
+        "last_global": jax.tree.map(
+            lambda x: x.astype(jnp.float32), params),
+        "smooth_delta": zeros,
+        "has_delta": jnp.zeros((n,), jnp.float32),      # bot marker
+        "clip": jnp.asarray(clip_init, jnp.float32),
+    }
+
+
+def _global_norm(tree: PyTree, axis0: bool = True) -> Array:
+    """Per-peer l2 norm over all leaves (leading axis = peers)."""
+    sq = [jnp.sum(jnp.square(x.astype(jnp.float32)),
+                  axis=tuple(range(1, x.ndim))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(sq))
+
+
+def dp_aggregate(fed, params: PyTree, momentum: PyTree,
+                 dp_state: Dict[str, PyTree], a_mask: Array, rng: Array
+                 ) -> Tuple[PyTree, PyTree, Dict[str, PyTree]]:
+    """Alg. 4 for the sim backend. Returns (params, momentum, dp_state)."""
+    cfg = fed.cfg
+    n_t = jnp.maximum(jnp.sum(a_mask), 1.0)
+    c_t = dp_state["clip"]
+
+    # lines 1-3: noise calibration
+    sigma_b = n_t / 20.0
+    z_delta = (cfg.noise_multiplier ** -2
+               - (2.0 * sigma_b) ** -2) ** -0.5
+    sigma_delta = z_delta * c_t
+
+    # line 4: local delta vs last-known global model
+    delta = jax.tree.map(
+        lambda p, g: p.astype(jnp.float32) - g,
+        params, dp_state["last_global"])
+
+    # line 5: clipping indicator
+    norms = _global_norm(delta)                          # [N]
+    b_ind = (norms <= c_t).astype(jnp.float32)
+
+    # line 6: clip + noise
+    scale = jnp.minimum(1.0, c_t / jnp.maximum(norms, 1e-12))
+    keys = list(jax.random.split(rng, len(jax.tree.leaves(delta))))
+    noise_std = sigma_delta / jnp.sqrt(n_t)
+
+    def clip_noise(x, k):
+        s = scale.reshape((-1,) + (1,) * (x.ndim - 1))
+        return x * s + noise_std * jax.random.normal(k, x.shape, jnp.float32)
+
+    leaves, treedef = jax.tree.flatten(delta)
+    tilde = jax.tree.unflatten(
+        treedef, [clip_noise(x, k) for x, k in zip(leaves, keys)])
+
+    # line 7: smoothing (bot -> take tilde directly)
+    has = dp_state["has_delta"]
+    smooth = jax.tree.map(
+        lambda sd, td: jnp.where(
+            has.reshape((-1,) + (1,) * (td.ndim - 1)) > 0,
+            BETA * sd + td, td),
+        dp_state["smooth_delta"], tilde)
+
+    # line 8: DP-safe local model
+    theta_hat = jax.tree.map(
+        lambda g, sd: g + ETA_U * sd, dp_state["last_global"], smooth)
+
+    # lines 10-15: MAR over (theta_hat, momentum, b, smooth_delta).
+    # The binary indicator leaks whether a peer clipped, so with
+    # use_secagg it travels through pairwise-masked secure aggregation
+    # (core/secagg.py; paper §A.2) instead of the plain group mean.
+    agg_state = {"p": theta_hat, "m": momentum, "sd": smooth}
+    if getattr(fed.cfg, "use_secagg", False):
+        from repro.core.secagg import secure_indicator_average
+        b_bar = secure_indicator_average(
+            b_ind, fed.plan, jax.random.fold_in(rng, 777),
+            t=0, alive=a_mask)
+        agg_state = fed._aggregate(agg_state, a_mask)
+    else:
+        agg_state["b"] = b_ind
+        agg_state = fed._aggregate(agg_state, a_mask)
+        b_bar = agg_state["b"]                           # [N] per-peer view
+
+    new_params = jax.tree.map(
+        lambda x, p: x.astype(p.dtype), agg_state["p"], params)
+    new_m = agg_state["m"]
+
+    # lines 16-17: noised indicator average -> clipping-bound update.
+    # b_bar is already the group/global average; one more shared noise draw
+    k_b = jax.random.fold_in(rng, 12345)
+    b_tilde = jnp.mean(b_bar) + jax.random.normal(k_b, (), jnp.float32) \
+        * sigma_b / n_t
+    new_clip = c_t * jnp.exp(-ETA_C * (b_tilde - GAMMA))
+
+    # participants update their last-global / smoothed-delta records
+    am = lambda x: a_mask.reshape((-1,) + (1,) * (x.ndim - 1))
+    new_last = jax.tree.map(
+        lambda old, new: jnp.where(am(old) > 0, new.astype(jnp.float32), old),
+        dp_state["last_global"], agg_state["p"])
+    new_sd = jax.tree.map(
+        lambda old, new: jnp.where(am(old) > 0, new, old),
+        dp_state["smooth_delta"], agg_state["sd"])
+    new_has = jnp.maximum(has, a_mask)
+
+    return new_params, new_m, {
+        "last_global": new_last, "smooth_delta": new_sd,
+        "has_delta": new_has, "clip": new_clip,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Privacy accounting (Renyi DP, Gaussian mechanism, q = sampling rate)
+# ---------------------------------------------------------------------------
+
+def epsilon_estimate(iterations: int, noise_multiplier: float,
+                     delta: float = 1e-5, sampling_rate: float = 1.0
+                     ) -> float:
+    """(eps, delta)-DP upper estimate via RDP composition.
+
+    For q = 1 the Gaussian mechanism has RDP(alpha) = alpha / (2 z^2);
+    for q < 1 we use the standard subsampling bound
+    RDP(alpha) <= q^2 * alpha / z^2 (valid for the alpha range used).
+    eps = min_alpha [ T * RDP(alpha) + log(1/delta) / (alpha - 1) ].
+    """
+    z = noise_multiplier
+    if z <= 0:
+        return float("inf")
+    best = float("inf")
+    for alpha in [1.5, 2, 3, 4, 6, 8, 16, 32, 64, 128, 256]:
+        if sampling_rate >= 1.0:
+            rdp = alpha / (2.0 * z * z)
+        else:
+            rdp = (sampling_rate ** 2) * alpha / (z * z)
+        eps = iterations * rdp + math.log(1.0 / delta) / (alpha - 1.0)
+        best = min(best, eps)
+    return best

@@ -1,0 +1,412 @@
+"""The MAR-FL training loop (Alg. 1) and its baselines (sim backend).
+
+Peers are the leading axis of every state pytree leaf; local updates are
+vmapped Momentum-SGD; aggregation dispatches on ``technique``:
+
+* ``mar``     — Moshpit All-Reduce over a :class:`GridPlan` (the paper)
+* ``fedavg``  — client-server mean over participating peers
+* ``rdfl``    — ring-decentralized FL (global mean; ring cost model)
+* ``ar``      — naive all-to-all All-Reduce FL
+
+All four produce the *same* global average under full participation
+(paper Fig. 5 "qualitative identity"); they differ in communication cost
+(``topology.py``) and churn semantics. Partial participation and dropout
+follow §3.1: U_t peers run local updates; A_t = U_t minus dropouts joins
+aggregation; non-participants carry state forward (Alg. 1 line 5).
+
+One FL iteration is a single jitted function of (state, masks, rng);
+the loop is host-side so benchmarks can interleave evaluation and
+communication accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mar_allreduce as mar
+from repro.core import topology
+from repro.core.moshpit import GridPlan, plan_grid
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.synthetic import classification_task
+from repro.models.small import build_peer_model
+from repro.optim.sgdm import momentum_sgd_init, momentum_sgd_step
+
+Array = jax.Array
+PyTree = Any
+
+TECHNIQUES = ("mar", "fedavg", "rdfl", "ar")
+
+
+@dataclasses.dataclass(frozen=True)
+class FederationConfig:
+    n_peers: int = 125
+    technique: str = "mar"
+    task: str = "text"               # vision | text
+    # MAR grid: default plan_grid(n_peers) -> e.g. 125 = 5^3
+    group_size: Optional[int] = None
+    mar_rounds: Optional[int] = None  # None -> grid depth (exact)
+    # local update (paper §3.1)
+    local_batches: int = 1            # B in Alg. 1
+    batch_size: int = 16              # 64 for vision, 16 for text per paper
+    lr: float = 0.1
+    momentum: float = 0.9
+    # participation / churn
+    participation_rate: float = 1.0
+    dropout_rate: float = 0.0
+    # data heterogeneity
+    alpha: Optional[float] = 1.0      # Dirichlet; None -> iid
+    # KD (Alg. 2/3)
+    use_kd: bool = False
+    kd_iterations: int = 6            # K
+    kd_temperature: float = 3.0       # tau
+    kd_selection_ratio: float = 0.4   # rho_l
+    kd_epochs: int = 1                # E
+    # DP (Alg. 4)
+    use_dp: bool = False
+    noise_multiplier: float = 0.3     # sigma_mult
+    dp_clip_init: float = 1.0         # C_0
+    use_secagg: bool = False          # pairwise-masked indicator (§A.2)
+    # beyond-paper: staleness-1 aggregation — the MAR result computed at
+    # iteration t is *applied* at t+1, so its collectives overlap the
+    # next iteration's compute (async/delayed averaging; DESIGN.md §5)
+    async_aggregation: bool = False
+    # beyond-paper: int8 error-feedback delta compression on the wire
+    # (core/compression.py) — 4x fewer MAR bytes, bias-free over time
+    compress: Optional[str] = None    # None | "int8_ef"
+    seed: int = 0
+
+    def grid(self) -> GridPlan:
+        return plan_grid(self.n_peers, self.group_size)
+
+
+@dataclasses.dataclass
+class FederationState:
+    params: PyTree                    # [N, ...] stacked peer params
+    momentum: PyTree                  # [N, ...]
+    iteration: int
+    rng: Array
+    dp: Optional[Dict[str, PyTree]] = None   # see core/dp.py
+    kd_lambda: float = 1.0
+    pending: Optional[PyTree] = None  # staleness-1 aggregated state
+    ref: Optional[PyTree] = None      # int8_ef shared reference point
+    ef_error: Optional[PyTree] = None # int8_ef residual carry
+
+
+class Federation:
+    """Owns the task data, the jitted iteration fns, and the comm ledger."""
+
+    def __init__(self, cfg: FederationConfig):
+        if cfg.technique not in TECHNIQUES:
+            raise ValueError(cfg.technique)
+        self.cfg = cfg
+        self.plan = cfg.grid()
+        spec, train, test = classification_task(cfg.task, seed=cfg.seed)
+        self.spec = spec
+        self.test = {k: jnp.asarray(v) for k, v in test.items()}
+        self.init_fn, self.apply_fn = build_peer_model(
+            cfg.task, spec.feature_dim, spec.num_classes)
+
+        # --- federated partition (rectangular per-peer arrays) ----------
+        if cfg.alpha is None:
+            shards = iid_partition(len(train["y"]), cfg.n_peers,
+                                   seed=cfg.seed)
+        else:
+            shards = dirichlet_partition(train["y"], cfg.n_peers,
+                                         alpha=cfg.alpha, seed=cfg.seed)
+        rng = np.random.default_rng(cfg.seed + 1)
+        per_peer = max(cfg.batch_size,
+                       int(np.median([len(s) for s in shards])))
+        xs, ys = [], []
+        for s in shards:
+            take = rng.choice(s, size=per_peer, replace=len(s) < per_peer)
+            xs.append(train["x"][take])
+            ys.append(train["y"][take])
+        self.data_x = jnp.asarray(np.stack(xs))     # [N, P, D]
+        self.data_y = jnp.asarray(np.stack(ys))     # [N, P]
+
+        self.model_bytes = topology.pytree_bytes(
+            self.init_fn(jax.random.PRNGKey(0))) * 2  # theta + momentum
+        self.comm_bytes = 0.0
+        self._it_fn = jax.jit(self._iteration,
+                              static_argnames=("use_kd", "use_dp",
+                                               "do_aggregate"))
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> FederationState:
+        key = jax.random.PRNGKey(self.cfg.seed)
+        params0 = self.init_fn(key)  # same theta^0 for every peer (Alg. 1)
+        stack = lambda x: jnp.broadcast_to(
+            x[None], (self.cfg.n_peers,) + x.shape)
+        params = jax.tree.map(stack, params0)
+        mom = momentum_sgd_init(params)
+        state = FederationState(params=params, momentum=mom, iteration=0,
+                                rng=jax.random.PRNGKey(self.cfg.seed + 7))
+        if self.cfg.use_dp:
+            from repro.core.dp import dp_init
+            state.dp = dp_init(params, self.cfg.dp_clip_init)
+        if self.cfg.compress == "int8_ef":
+            state.ref = jax.tree.map(
+                lambda x: x.astype(jnp.float32), params)
+        return state
+
+    # ------------------------------------------------------------------
+    # masks
+    # ------------------------------------------------------------------
+    def sample_masks(self, rng: np.random.Generator
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """(participates U_t, aggregates A_t) boolean masks, float32."""
+        n = self.cfg.n_peers
+        u = rng.random(n) < self.cfg.participation_rate
+        if not u.any():
+            u[rng.integers(n)] = True
+        drop = rng.random(n) < self.cfg.dropout_rate
+        a = u & ~drop
+        if not a.any():
+            a[np.flatnonzero(u)[0]] = True
+        return u.astype(np.float32), a.astype(np.float32)
+
+    # ------------------------------------------------------------------
+    # local update (vmapped Momentum-SGD over B minibatches)
+    # ------------------------------------------------------------------
+    def _local_update(self, params, momentum, rng):
+        cfg = self.cfg
+
+        def peer_update(p, m, x, y, key):
+            def one_batch(carry, bkey):
+                p, m = carry
+                idx = jax.random.randint(bkey, (cfg.batch_size,), 0,
+                                         x.shape[0])
+                bx, by = x[idx], y[idx]
+
+                def loss_fn(pp):
+                    logits = self.apply_fn(pp, bx)
+                    logp = jax.nn.log_softmax(logits)
+                    return -jnp.mean(
+                        jnp.take_along_axis(logp, by[:, None], 1))
+
+                grads = jax.grad(loss_fn)(p)
+                p, m = momentum_sgd_step(p, m, grads, cfg.lr, cfg.momentum)
+                return (p, m), None
+
+            keys = jax.random.split(key, cfg.local_batches)
+            (p, m), _ = jax.lax.scan(one_batch, (p, m), keys)
+            return p, m
+
+        keys = jax.random.split(rng, cfg.n_peers)
+        return jax.vmap(peer_update)(params, momentum, self.data_x,
+                                     self.data_y, keys)
+
+    # ------------------------------------------------------------------
+    # one FL iteration (jitted)
+    # ------------------------------------------------------------------
+    def _iteration(self, params, momentum, dp_state, u_mask, a_mask, rng,
+                   kd_lambda, use_kd: bool, use_dp: bool,
+                   do_aggregate: bool = True):
+        cfg = self.cfg
+        k_local, k_kd, k_dp = jax.random.split(rng, 3)
+
+        new_p, new_m = self._local_update(params, momentum, k_local)
+        # Alg. 1 line 5: non-participants keep previous state
+        sel = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(
+                u_mask.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, a, b),
+            new, old)
+        params, momentum = sel(new_p, params), sel(new_m, momentum)
+
+        if use_kd:
+            from repro.core.mkd import mkd_rounds
+            params, momentum = mkd_rounds(
+                self, params, momentum, a_mask, k_kd, kd_lambda)
+
+        if not do_aggregate:
+            return params, momentum, dp_state
+        if use_dp:
+            from repro.core.dp import dp_aggregate
+            params, momentum, dp_state = dp_aggregate(
+                self, params, momentum, dp_state, a_mask, k_dp)
+        else:
+            state = {"p": params, "m": momentum}
+            state = self._aggregate(state, a_mask)
+            params, momentum = state["p"], state["m"]
+        return params, momentum, dp_state
+
+    def _aggregate(self, state: PyTree, a_mask: Array) -> PyTree:
+        cfg = self.cfg
+        if cfg.technique == "mar":
+            return mar.mar_aggregate_sim(state, self.plan, a_mask,
+                                         num_rounds=cfg.mar_rounds)
+        if cfg.technique in ("fedavg", "ar"):
+            return mar.allreduce_all_to_all_sim(state, a_mask)
+        if cfg.technique == "rdfl":
+            return mar.ring_allreduce_sim(state, a_mask)
+        raise ValueError(cfg.technique)
+
+    # ------------------------------------------------------------------
+    def step(self, state: FederationState,
+             masks: Optional[Tuple[np.ndarray, np.ndarray]] = None
+             ) -> FederationState:
+        cfg = self.cfg
+        host_rng = np.random.default_rng(cfg.seed * 100003 + state.iteration)
+        u, a = masks if masks is not None else self.sample_masks(host_rng)
+        rng, it_rng = jax.random.split(state.rng)
+        use_kd = cfg.use_kd and state.iteration < cfg.kd_iterations
+        kd_lambda = max(0.0, 1.0 - state.iteration / max(cfg.kd_iterations, 1))
+
+        if cfg.async_aggregation:
+            return self._step_async(state, u, a, rng, it_rng, use_kd,
+                                    kd_lambda)
+        if cfg.compress == "int8_ef":
+            return self._step_compressed(state, u, a, rng, it_rng,
+                                         use_kd, kd_lambda)
+
+        params, momentum, dp_state = self._it_fn(
+            state.params, state.momentum, state.dp,
+            jnp.asarray(u), jnp.asarray(a), it_rng,
+            jnp.asarray(kd_lambda, jnp.float32),
+            use_kd=use_kd, use_dp=cfg.use_dp)
+
+        self.comm_bytes += topology.iteration_bytes(
+            cfg.technique, int(a.sum()), self.model_bytes, self.plan,
+            num_rounds=cfg.mar_rounds, use_kd=use_kd,
+            kd_logit_bytes=self._kd_logit_bytes() if use_kd else 0)
+        return FederationState(params=params, momentum=momentum,
+                               iteration=state.iteration + 1, rng=rng,
+                               dp=dp_state, kd_lambda=kd_lambda)
+
+    # ------------------------------------------------------------------
+    # staleness-1 aggregation (beyond-paper; DESIGN.md §5): the MAR
+    # launched for iteration t's snapshot is applied at t+1 with a local
+    # progress correction — x_{t+1} = agg(y_{t-1}) + (y_t - y_{t-1}) —
+    # so on real hardware the collective overlaps iteration t+1's
+    # compute instead of blocking iteration t.
+    # ------------------------------------------------------------------
+    def _step_async(self, state, u, a, rng, it_rng, use_kd, kd_lambda):
+        cfg = self.cfg
+        assert not cfg.use_dp, "async_aggregation + DP not supported"
+        y_p, y_m, _ = self._it_fn(
+            state.params, state.momentum, None,
+            jnp.asarray(u), jnp.asarray(a), it_rng,
+            jnp.asarray(kd_lambda, jnp.float32),
+            use_kd=use_kd, use_dp=False, do_aggregate=False)
+
+        if state.pending is not None:
+            corr = lambda agg, y, snap: jax.tree.map(
+                lambda ag, yy, sn: ag + (yy.astype(ag.dtype)
+                                         - sn.astype(ag.dtype)),
+                agg, y, snap)
+            new_p = corr(state.pending["agg_p"], y_p,
+                         state.pending["snap_p"])
+            new_m = corr(state.pending["agg_m"], y_m,
+                         state.pending["snap_m"])
+        else:
+            new_p, new_m = y_p, y_m
+
+        agg = self._agg_fn({"p": y_p, "m": y_m}, jnp.asarray(a))
+        self.comm_bytes += topology.iteration_bytes(
+            cfg.technique, int(a.sum()), self.model_bytes, self.plan,
+            num_rounds=cfg.mar_rounds)
+        return FederationState(
+            params=new_p, momentum=new_m,
+            iteration=state.iteration + 1, rng=rng, dp=None,
+            kd_lambda=kd_lambda,
+            pending={"agg_p": agg["p"], "agg_m": agg["m"],
+                     "snap_p": y_p, "snap_m": y_m})
+
+    @functools.cached_property
+    def _agg_fn(self):
+        return jax.jit(self._aggregate)
+
+    # ------------------------------------------------------------------
+    # int8 error-feedback compressed aggregation (beyond-paper)
+    # ------------------------------------------------------------------
+    def _step_compressed(self, state, u, a, rng, it_rng, use_kd,
+                         kd_lambda):
+        cfg = self.cfg
+        assert not cfg.use_dp, "compress + DP: quantize after noising TBD"
+        y_p, y_m, _ = self._it_fn(
+            state.params, state.momentum, None,
+            jnp.asarray(u), jnp.asarray(a), it_rng,
+            jnp.asarray(kd_lambda, jnp.float32),
+            use_kd=use_kd, use_dp=False, do_aggregate=False)
+        new_p, new_m, new_ref, new_err = self._compressed_agg_fn(
+            y_p, y_m, state.ref, state.ef_error, jnp.asarray(a))
+        from repro.core.compression import INT8_RATIO
+        self.comm_bytes += topology.iteration_bytes(
+            cfg.technique, int(a.sum()), self.model_bytes, self.plan,
+            num_rounds=cfg.mar_rounds) / INT8_RATIO
+        return FederationState(
+            params=new_p, momentum=new_m,
+            iteration=state.iteration + 1, rng=rng, dp=None,
+            kd_lambda=kd_lambda, ref=new_ref, ef_error=new_err)
+
+    @functools.cached_property
+    def _compressed_agg_fn(self):
+        from repro.core.compression import compressed_aggregate
+
+        def fn(params, momentum, ref, error, a_mask):
+            return compressed_aggregate(self._aggregate, params, momentum,
+                                        ref, error, a_mask)
+
+        return jax.jit(fn)
+
+    def _kd_logit_bytes(self) -> int:
+        # per teacher<->student exchange: logits on B local minibatches
+        return (self.cfg.local_batches * self.cfg.batch_size
+                * self.spec.num_classes * 4)
+
+    # ------------------------------------------------------------------
+    # evaluation
+    # ------------------------------------------------------------------
+    @functools.cached_property
+    def _eval_fn(self):
+        def acc(params, x, y):
+            logits = self.apply_fn(params, x)
+            return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return jax.jit(acc)
+
+    def evaluate(self, state: FederationState, peer: int = 0) -> float:
+        """Test accuracy of one peer's model (post-aggregation they agree
+        under full participation)."""
+        p = jax.tree.map(lambda x: x[peer], state.params)
+        return float(self._eval_fn(p, self.test["x"], self.test["y"]))
+
+    def evaluate_mean_model(self, state: FederationState) -> float:
+        p = jax.tree.map(lambda x: jnp.mean(x, 0), state.params)
+        return float(self._eval_fn(p, self.test["x"], self.test["y"]))
+
+    def peer_disagreement(self, state: FederationState) -> float:
+        """Mean squared distance of peers to the global mean (Eq. 1 LHS)."""
+        leaves = jax.tree.leaves(state.params)
+        total, count = 0.0, 0
+        for x in leaves:
+            mean = jnp.mean(x, 0, keepdims=True)
+            total += float(jnp.sum(jnp.square(x - mean)))
+            count += x[0].size
+        return total / max(self.cfg.n_peers, 1)
+
+
+def run_federation(cfg: FederationConfig, iterations: int,
+                   eval_every: int = 5,
+                   verbose: bool = False) -> Dict[str, List[float]]:
+    """Train and return the (accuracy, comm) history used by benchmarks."""
+    fed = Federation(cfg)
+    state = fed.init_state()
+    hist = {"iteration": [], "accuracy": [], "comm_bytes": [],
+            "disagreement": []}
+    for t in range(iterations):
+        state = fed.step(state)
+        if (t + 1) % eval_every == 0 or t == iterations - 1:
+            acc = fed.evaluate(state)
+            hist["iteration"].append(t + 1)
+            hist["accuracy"].append(acc)
+            hist["comm_bytes"].append(fed.comm_bytes)
+            hist["disagreement"].append(fed.peer_disagreement(state))
+            if verbose:
+                print(f"  it={t+1:4d} acc={acc:.4f} "
+                      f"comm={fed.comm_bytes/1e6:.1f}MB")
+    return hist

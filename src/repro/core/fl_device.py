@@ -1,0 +1,149 @@
+"""Device-backend MAR-FL: the paper's protocol on the production mesh.
+
+A *peer* is a slice of the mesh's DP axes (the whole ``pod`` on the
+multi-pod mesh; one ``data`` index on the single-pod mesh — DESIGN.md
+§5). Every state leaf carries a leading peer axis sharded over the peer
+mesh axes; within a peer, params shard over FSDP/TP axes per
+``runtime/sharding.py``.
+
+One FL iteration (Alg. 1, device form):
+
+  1. ``local_steps`` Momentum-SGD steps per peer, each accumulating
+     grads over ``n_micro`` microbatches (activation memory control).
+     No cross-peer communication — only within-peer FSDP/TP collectives.
+  2. MAR aggregation of (theta, m): ``depth`` masked group-mean rounds
+     over the peer grid (``one_shot=True`` fuses them into one global
+     all-reduce — beyond-paper variant).
+
+Collective bytes per FL iteration drop by ``local_steps`` x versus
+per-step gradient DP — the paper's communication saving, realized on a
+TPU mesh as local-SGD cadence (DESIGN.md §2).
+
+``make_serve_step`` / ``make_prefill_step`` cover the inference shapes
+(no aggregation — MAR is a training-time protocol).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mar_allreduce as mar
+from repro.core.moshpit import GridPlan
+from repro.models.model import Model
+from repro.optim.sgdm import momentum_sgd_step
+
+Array = jax.Array
+PyTree = Any
+
+
+def init_fl_state(model: Model, n_peers: int, key: Array) -> Dict[str, Any]:
+    """Peer-stacked (params, momentum) — every peer starts from the same
+    theta^0 (Alg. 1)."""
+    params = model.init(key)
+    stack = lambda x: jnp.broadcast_to(x[None], (n_peers,) + x.shape)
+    params = jax.tree.map(stack, params)
+    momentum = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"params": params, "momentum": momentum,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def fl_state_shape(model: Model, n_peers: int,
+                   momentum_dtype: str = "float32") -> Dict[str, Any]:
+    """ShapeDtypeStructs of the FL state (dry-run; no allocation)."""
+    pshape = model.init_shape()
+    lift = lambda x: jax.ShapeDtypeStruct((n_peers,) + x.shape, x.dtype)
+    params = jax.tree.map(lift, pshape)
+    mom = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(momentum_dtype)),
+        params)
+    return {"params": params, "momentum": mom,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_fl_train_step(model: Model, grid: GridPlan, lr: float = 0.1,
+                       mu: float = 0.9, one_shot: bool = False,
+                       aggregate: bool = True,
+                       comm_dtype: Optional[str] = None) -> Callable:
+    """Returns ``fl_train_step(state, batch) -> (state, metrics)``.
+
+    batch: {"tokens": [P, B, n_micro, mb, s], "labels": ..., optional
+    "prefix_embeds": ...} — P peers, B local steps, grad-accumulated
+    microbatches.
+    """
+
+    def peer_local_update(params, momentum, peer_batch):
+        """One peer: B sequential Momentum-SGD steps."""
+
+        def one_step(carry, step_batch):      # step_batch: [n_micro, mb, ..]
+            p, m = carry
+
+            def micro(acc, mb_batch):
+                loss, grads = jax.value_and_grad(model.loss)(p, mb_batch)
+                acc = (jax.tree.map(jnp.add, acc[0], grads),
+                       acc[1] + loss)
+                return acc, None
+
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), p)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), step_batch)
+            n_micro = jax.tree.leaves(step_batch)[0].shape[0]
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            p, m = momentum_sgd_step(p, m, grads, lr, mu)
+            return (p, m), lsum / n_micro
+
+        (params, momentum), losses = jax.lax.scan(
+            one_step, (params, momentum), peer_batch)
+        return params, momentum, jnp.mean(losses)
+
+    def fl_train_step(state, batch):
+        params, momentum = state["params"], state["momentum"]
+        new_p, new_m, loss = jax.vmap(peer_local_update)(
+            params, momentum, batch)
+        if aggregate:
+            agg = mar.mar_aggregate_device(
+                {"p": new_p, "m": new_m}, grid, one_shot=one_shot,
+                comm_dtype=comm_dtype)
+            new_p, new_m = agg["p"], agg["m"]
+        metrics = {"loss": jnp.mean(loss)}
+        return {"params": new_p, "momentum": new_m,
+                "step": state["step"] + 1}, metrics
+
+    return fl_train_step
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+def make_serve_step(model: Model) -> Callable:
+    """One greedy decode step over a request batch (no aggregation)."""
+
+    def serve_step(params, cache, token):
+        logits, cache = model.decode_step(params, cache, token)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, cache
+
+    return serve_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    """Prefill: forward over the full prompt, emit last-token logits and
+    the populated cache (single pass; see transformer.forward)."""
+
+    def prefill_step(params, batch):
+        logits, _, cache = model.forward(
+            params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            collect_cache=True)
+        return logits[:, -1], cache
+
+    return prefill_step

@@ -1,0 +1,212 @@
+"""Moshpit All-Reduce execution: group means over the MAR grid.
+
+Two backends with identical math (property-tested against each other):
+
+* **sim** — peers stacked on a leading axis ``[N, ...]`` of every pytree
+  leaf; one MAR round is a masked segment-mean over that axis grouped by
+  the round's group key. Supports arbitrary N, per-peer participation
+  masks (churn), and runs fully vectorized under jit/vmap. This is the
+  backend for the paper-scale experiments (N = 16/64/125).
+
+* **device** — peers are slices of the production mesh's DP axes
+  (``pod`` x ``data``); the leading peer axis is *sharded* over those
+  axes and one MAR round is a reshape-to-grid + masked mean + broadcast,
+  constrained so XLA GSPMD lowers it to a partial all-reduce whose
+  replica groups are exactly the paper's MAR groups. ``one_shot=True``
+  replaces the d-round schedule with a single full-mean all-reduce —
+  the beyond-paper variant measured in EXPERIMENTS.md §Perf.
+
+Churn semantics (paper §3.1): a dropped peer contributes neither to the
+numerator nor to the denominator of its group mean, but *receives* the
+group mean (it rejoins with the averaged model next iteration). An empty
+group keeps its previous state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.moshpit import GridPlan
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# sim backend
+# ---------------------------------------------------------------------------
+
+def _segment_mean(x: Array, seg_ids: Array, num_groups: int,
+                  mask: Array) -> Array:
+    """Masked per-group mean, scattered back to peers.
+
+    x: [N, ...]; seg_ids: [N] int32 group ids; mask: [N] (0/1 float).
+    Returns [N, ...] where peer i holds mean over its group's active peers
+    (or its own value if the whole group dropped).
+    """
+    mshape = (-1,) + (1,) * (x.ndim - 1)
+    m = mask.reshape(mshape).astype(jnp.float32)
+    sums = jax.ops.segment_sum(x.astype(jnp.float32) * m, seg_ids,
+                               num_segments=num_groups)
+    cnts = jax.ops.segment_sum(mask.astype(jnp.float32), seg_ids,
+                               num_segments=num_groups)
+    cnt_per_peer = cnts[seg_ids].reshape(mshape)
+    mean = sums[seg_ids] / jnp.maximum(cnt_per_peer, 1.0)
+    keep_own = (cnt_per_peer == 0).astype(jnp.float32)
+    return (mean * (1.0 - keep_own)
+            + x.astype(jnp.float32) * keep_own).astype(x.dtype)
+
+
+def mar_round_sim(state: PyTree, plan: GridPlan, rnd: int,
+                  mask: Optional[Array] = None) -> PyTree:
+    """One MAR round over the leading peer axis (sim backend).
+
+    ``state`` leaves: [N, ...] with N == plan.n_peers. Virtual slots
+    (capacity > N) are handled by embedding into capacity internally.
+    """
+    n = plan.n_peers
+    cap = plan.capacity
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    seg = jnp.asarray(plan.group_key(np.arange(cap), rnd), jnp.int32)
+    num_groups = cap // plan.dims[rnd]
+
+    if cap == n:
+        def leaf(x):
+            return _segment_mean(x, seg, num_groups, mask)
+    else:
+        # pad with virtual always-dropped slots
+        pad_mask = jnp.concatenate(
+            [mask, jnp.zeros((cap - n,), mask.dtype)])
+
+        def leaf(x):
+            xp = jnp.concatenate(
+                [x, jnp.zeros((cap - n,) + x.shape[1:], x.dtype)], axis=0)
+            return _segment_mean(xp, seg, num_groups, pad_mask)[:n]
+
+    return jax.tree.map(leaf, state)
+
+
+def mar_aggregate_sim(state: PyTree, plan: GridPlan,
+                      mask: Optional[Array] = None,
+                      num_rounds: Optional[int] = None) -> PyTree:
+    """Full MAR schedule: ``num_rounds`` (default depth) rounds in order.
+
+    With full participation and an exact grid this returns the exact
+    global mean in every slot (paper §2.3).
+    """
+    rounds = plan.depth if num_rounds is None else num_rounds
+    for g in range(rounds):
+        state = mar_round_sim(state, plan, g % plan.depth, mask)
+    return state
+
+
+def allreduce_all_to_all_sim(state: PyTree,
+                             mask: Optional[Array] = None) -> PyTree:
+    """AR-FL baseline: every peer averages over all active peers."""
+    n = jax.tree.leaves(state)[0].shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    seg = jnp.zeros((n,), jnp.int32)
+    return jax.tree.map(lambda x: _segment_mean(x, seg, 1, mask), state)
+
+
+# ---------------------------------------------------------------------------
+# device backend (production mesh)
+# ---------------------------------------------------------------------------
+
+def _grid_reshape_mean(x: Array, dims: Sequence[int], axis: int,
+                       mask: Array, comm_dtype=None) -> Array:
+    """Masked mean over grid axis ``axis`` of the leading peer dim.
+
+    ``comm_dtype`` (e.g. bf16) sets the dtype of the cross-peer reduce —
+    the collective's wire format. The group mean still divides in f32.
+    This is the delta-compression hook (EXPERIMENTS.md §Perf C-ladder):
+    group sizes are <= 8, so bf16 accumulation loses <1 ulp-of-bf16.
+    """
+    lead = x.shape[0]
+    grid = tuple(dims)
+    acc_dt = jnp.float32 if comm_dtype is None else jnp.dtype(comm_dtype)
+    xg = x.reshape(grid + x.shape[1:])
+    mg = mask.reshape(grid + (1,) * (x.ndim - 1))
+    num = jnp.sum(xg.astype(acc_dt) * mg.astype(acc_dt), axis=axis,
+                  keepdims=True).astype(jnp.float32)
+    den = jnp.sum(mg.astype(jnp.float32), axis=axis, keepdims=True)
+    mean = num / jnp.maximum(den, 1.0)
+    empty = (den == 0).astype(jnp.float32)
+    out = mean * (1.0 - empty) + xg.astype(jnp.float32) * empty
+    out = jnp.broadcast_to(out, grid + x.shape[1:])
+    # broadcast after keepdims-mean: group members all receive the mean
+    return out.astype(x.dtype).reshape((lead,) + x.shape[1:])
+
+
+def mar_round_device(state: PyTree, plan: GridPlan, rnd: int,
+                     mask: Optional[Array] = None,
+                     comm_dtype=None) -> PyTree:
+    """One MAR round on the device backend.
+
+    ``state`` leaves: [P, ...] with P == plan.capacity, leading axis
+    sharded over the mesh DP axes. The reshape [P, ...] ->
+    [*dims, ...] aligns grid axes with mesh-axis factors so the
+    mean+broadcast over axis ``rnd`` lowers to a replica-grouped
+    all-reduce touching only that round's groups (the paper's partial
+    communication, GSPMD-native).
+    """
+    assert plan.capacity == plan.n_peers, "device backend needs exact grids"
+    if mask is None:
+        mask = jnp.ones((plan.capacity,), jnp.float32)
+    fn = functools.partial(_grid_reshape_mean, dims=plan.dims, axis=rnd,
+                           mask=mask, comm_dtype=comm_dtype)
+    return jax.tree.map(fn, state)
+
+
+def mar_aggregate_device(state: PyTree, plan: GridPlan,
+                         mask: Optional[Array] = None,
+                         one_shot: bool = False,
+                         comm_dtype=None) -> PyTree:
+    """Full MAR schedule on the device backend.
+
+    ``one_shot`` fuses the d rounds into a single global masked mean —
+    mathematically identical under full participation, lowered by XLA to
+    one all-reduce over the whole DP axis set (beyond-paper variant; see
+    EXPERIMENTS.md §Perf for the collective-bytes comparison).
+    """
+    if one_shot:
+        n = plan.capacity
+        if mask is None:
+            mask = jnp.ones((n,), jnp.float32)
+        acc_dt = jnp.float32 if comm_dtype is None else jnp.dtype(comm_dtype)
+
+        def leaf(x):
+            m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+            num = jnp.sum(x.astype(acc_dt) * m.astype(acc_dt), axis=0,
+                          keepdims=True).astype(jnp.float32)
+            den = jnp.maximum(jnp.sum(m.astype(jnp.float32), axis=0,
+                                      keepdims=True), 1.0)
+            return jnp.broadcast_to(num / den, x.shape).astype(x.dtype)
+
+        return jax.tree.map(leaf, state)
+    for g in range(plan.depth):
+        state = mar_round_device(state, plan, g, mask, comm_dtype)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# RDFL (ring) baseline — sim backend
+# ---------------------------------------------------------------------------
+
+def ring_allreduce_sim(state: PyTree, mask: Optional[Array] = None) -> PyTree:
+    """RDFL-style ring: global average via the closed ring.
+
+    RDFL circulates models around a ring so every peer ends with the
+    global average; mathematically the fixed point equals the all-to-all
+    mean, so we reuse the masked global mean. Its *cost* model (O(N^2)
+    bytes for full-model per-hop circulation, no tolerance to ring
+    breaks) lives in ``topology.py``; churn on a ring is modeled as a
+    failed iteration for the affected peers by the caller.
+    """
+    return allreduce_all_to_all_sim(state, mask)

@@ -1,0 +1,158 @@
+"""Moshpit Knowledge Distillation (paper Alg. 2 + Alg. 3).
+
+MKD reuses MAR's group formation: in MKD round ``g`` each peer's
+candidate teachers ``C_g`` are its round-``g`` MAR group mates. The peer
+(1) rates every candidate by the KL divergence between the candidate's
+and its own *softened* output distributions on its local minibatches
+(Alg. 3 — the Shao et al. 2024 non-iid guard), (2) keeps the top-l
+(l = ceil(rho_l * |C_g|)) lowest-KL teachers, (3) averages their logits
+and distills for E epochs with the Hinton loss
+
+    L = (1 - alpha) CE(y, softmax(s)) + alpha tau^2 KL(p_z || p_s),
+    alpha = lambda = max(0, 1 - (t-1)/K)   (linear anneal, §A.1).
+
+Implementation: the sim backend stacks peers on the leading axis, so
+"collecting teacher models" is a gather of group-mates' params — [N, M,
+...] — and teacher logits come from a double vmap. Dropped peers
+(a_mask = 0) are excluded from candidate sets but still distill (they
+did run their local update; Alg. 1 gates aggregation, and MKD precedes
+MAR within the iteration).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+
+def softened(logits: Array, tau: float) -> Array:
+    return jax.nn.softmax(logits / tau, axis=-1)
+
+
+def kl_divergence(p: Array, q: Array, eps: float = 1e-9) -> Array:
+    """KL(p || q) over the last axis."""
+    p = jnp.clip(p, eps, 1.0)
+    q = jnp.clip(q, eps, 1.0)
+    return jnp.sum(p * (jnp.log(p) - jnp.log(q)), axis=-1)
+
+
+def student_loss(student_logits: Array, teacher_logits: Array, labels: Array,
+                 tau: float, alpha: Array) -> Array:
+    """Alg. 2 line 8: weighted CE + tau^2-scaled KL to the teacher mix."""
+    ce = -jnp.mean(jnp.take_along_axis(
+        jax.nn.log_softmax(student_logits), labels[:, None], 1))
+    p_z = softened(teacher_logits, tau)
+    p_s = softened(student_logits, tau)
+    lkl = jnp.mean(kl_divergence(p_z, p_s))
+    return (1.0 - alpha) * ce + alpha * (tau ** 2) * lkl
+
+
+def select_teachers(my_logits: Array, cand_logits: Array, cand_mask: Array,
+                    tau: float, rho: float) -> Array:
+    """Alg. 3: weights [M] — 1/l for the top-l lowest-KL candidates.
+
+    my_logits: [B*, C]; cand_logits: [M, B*, C]; cand_mask: [M] (0 = the
+    candidate dropped or is the student itself).
+    """
+    m = cand_logits.shape[0]
+    p_s = softened(my_logits, tau)
+    p_c = softened(cand_logits, tau)
+    div = jnp.mean(kl_divergence(p_c, p_s[None]), axis=-1)       # [M]
+    div = jnp.where(cand_mask > 0, div, jnp.inf)
+    n_avail = jnp.sum(cand_mask > 0)
+    l = jnp.clip(jnp.ceil(rho * n_avail).astype(jnp.int32), 1, m)
+    order = jnp.argsort(div)                                      # asc
+    rank = jnp.argsort(order)                                     # rank of each
+    chosen = (rank < l) & (cand_mask > 0)
+    denom = jnp.maximum(jnp.sum(chosen), 1)
+    return chosen.astype(jnp.float32) / denom                     # [M]
+
+
+def mkd_rounds(fed, params: PyTree, momentum: PyTree, a_mask: Array,
+               rng: Array, kd_lambda: Array) -> Tuple[PyTree, PyTree]:
+    """All G MKD rounds of one FL iteration (sim backend).
+
+    ``fed`` is the :class:`~repro.core.federation.Federation` (gives the
+    grid plan, apply_fn, data and hyperparameters).
+    """
+    cfg = fed.cfg
+    plan = fed.plan
+    n = cfg.n_peers
+    tau, rho = cfg.kd_temperature, cfg.kd_selection_ratio
+
+    # fixed per-iteration distillation minibatch per peer (B ⋅ batch)
+    k_data, rng = jax.random.split(rng)
+    nbatch = cfg.local_batches * cfg.batch_size
+    idx = jax.random.randint(k_data, (n, nbatch), 0, fed.data_x.shape[1])
+    bx = jnp.take_along_axis(
+        fed.data_x, idx[..., None], axis=1)                      # [N, B*, D]
+    by = jnp.take_along_axis(fed.data_y, idx, axis=1)            # [N, B*]
+
+    rounds = cfg.mar_rounds if cfg.mar_rounds is not None else plan.depth
+    for g in range(rounds):
+        params, momentum = _mkd_one_round(
+            fed, params, momentum, a_mask, bx, by, g % plan.depth,
+            tau, rho, kd_lambda)
+    return params, momentum
+
+
+def _mkd_one_round(fed, params, momentum, a_mask, bx, by, g, tau, rho,
+                   kd_lambda):
+    cfg = fed.cfg
+    plan = fed.plan
+    n = cfg.n_peers
+
+    # candidate teachers = round-g MAR group mates (incl. virtual slots)
+    partners = np.asarray(plan.partner_matrix(g))                # [cap, M]
+    partners = partners[:n]
+    virtual = partners >= n                                       # pad slots
+    self_col = partners == np.arange(n)[:, None]
+    partners_c = np.where(virtual, 0, partners)
+    pmat = jnp.asarray(partners_c)
+
+    # candidate mask: group mate participates in aggregation, is real,
+    # and is not the student itself
+    cand_mask = (a_mask[pmat] *
+                 jnp.asarray(~virtual, jnp.float32) *
+                 jnp.asarray(~self_col, jnp.float32))             # [N, M]
+
+    # teacher logits: gather group-mates' params -> [N, M, ...]
+    t_params = jax.tree.map(lambda x: x[pmat], params)
+
+    def peer_round(p, m, tp, cmask, x, y):
+        my_logits = fed.apply_fn(p, x)                            # [B*, C]
+        cand_logits = jax.vmap(lambda q: fed.apply_fn(q, x))(tp)  # [M, B*, C]
+        w = select_teachers(my_logits, cand_logits, cmask, tau, rho)
+        zbar = jnp.einsum("m,mbc->bc", w, cand_logits)            # [B*, C]
+
+        def epoch(carry, _):
+            p, m = carry
+
+            def loss_fn(pp):
+                s = fed.apply_fn(pp, x)
+                return student_loss(s, zbar, y, tau, kd_lambda)
+
+            grads = jax.grad(loss_fn)(p)
+            from repro.optim.sgdm import momentum_sgd_step
+            p, m = momentum_sgd_step(p, m, grads, cfg.lr, cfg.momentum)
+            return (p, m), None
+
+        (p, m), _ = jax.lax.scan(epoch, (p, m), None,
+                                 length=cfg.kd_epochs)
+        return p, m
+
+    new_p, new_m = jax.vmap(peer_round)(params, momentum, t_params,
+                                        cand_mask, bx, by)
+    # a peer with zero available teachers keeps its pre-MKD state
+    has_teacher = (jnp.sum(cand_mask, axis=1) > 0).astype(jnp.float32)
+    mix = lambda a, b: jax.tree.map(
+        lambda u, v: jnp.where(
+            has_teacher.reshape((-1,) + (1,) * (u.ndim - 1)) > 0, u, v),
+        a, b)
+    return mix(new_p, params), mix(new_m, momentum)

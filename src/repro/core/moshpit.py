@@ -1,0 +1,206 @@
+"""Moshpit All-Reduce grid math and deterministic group-key schedule.
+
+The paper (§2.2) arranges N peers on a virtual d-dimensional grid
+``N = M^d``. In MAR round ``g`` a peer's *group key* is its grid
+coordinate vector with coordinate ``g`` struck out, so the ``M`` peers
+that differ only in coordinate ``g`` share a key and average together.
+After ``d`` rounds every peer holds the exact global mean (when
+``N = M^d`` and no dropouts). This module is pure index arithmetic —
+the TPU-native replacement for Hivemind DHT matchmaking (DESIGN.md §2);
+``mar_allreduce.py`` executes the schedule.
+
+Also provides ``plan_grid`` for general N (elastic peer counts): picks
+(M, d) with M^d >= N and minimal per-iteration traffic, padding virtual
+slots with a participation mask (the same mask mechanism that models
+churn), so restarts with a different peer count re-factorize cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPlan:
+    """A d-dimensional MAR grid for N peers.
+
+    ``dims`` may be heterogeneous (e.g. (2, 4, 4) for a 2-pod mesh whose
+    DP axes factor as 4x4) — the paper's M^d is the uniform special case.
+    """
+
+    n_peers: int               # real peers (<= capacity)
+    dims: Tuple[int, ...]      # group size per round; capacity = prod(dims)
+
+    @property
+    def depth(self) -> int:
+        return len(self.dims)
+
+    @property
+    def capacity(self) -> int:
+        return int(np.prod(self.dims))
+
+    @property
+    def is_exact(self) -> bool:
+        """Exact global average after ``depth`` rounds (no virtual slots)."""
+        return self.capacity == self.n_peers
+
+    # -- coordinates ----------------------------------------------------
+    def coords(self, peer: np.ndarray | int) -> np.ndarray:
+        """Mixed-radix coordinates of peer index; last dim fastest."""
+        peer = np.asarray(peer)
+        out = np.empty(peer.shape + (self.depth,), np.int64)
+        rem = peer
+        for axis in range(self.depth - 1, -1, -1):
+            out[..., axis] = rem % self.dims[axis]
+            rem = rem // self.dims[axis]
+        return out
+
+    def index(self, coords: np.ndarray) -> np.ndarray:
+        """Inverse of :meth:`coords`."""
+        coords = np.asarray(coords)
+        idx = np.zeros(coords.shape[:-1], np.int64)
+        for axis in range(self.depth):
+            idx = idx * self.dims[axis] + coords[..., axis]
+        return idx
+
+    # -- the group-key schedule ------------------------------------------
+    def group_key(self, peer: np.ndarray | int, rnd: int) -> np.ndarray:
+        """Round-``rnd`` group key: coordinates with axis ``rnd`` struck out.
+
+        Peers sharing a key form one group of size ``dims[rnd]``. Keys are
+        flattened to a scalar id so they can double as replica-group labels.
+        This reproduces the paper's "group key initialization and updates
+        that leverage chunk indices from d-1 previous MAR rounds": a peer's
+        chunk index in round r *is* its coordinate on axis r, and striking
+        a different axis every round guarantees no pair is revisited within
+        one FL iteration.
+        """
+        if not 0 <= rnd < self.depth:
+            raise ValueError(f"round {rnd} out of range for depth {self.depth}")
+        c = self.coords(peer)
+        key = np.zeros(c.shape[:-1], np.int64)
+        for axis in range(self.depth):
+            if axis == rnd:
+                continue
+            key = key * self.dims[axis] + c[..., axis]
+        return key
+
+    def groups_for_round(self, rnd: int) -> List[np.ndarray]:
+        """All replica groups (lists of peer ids) for MAR round ``rnd``."""
+        peers = np.arange(self.capacity)
+        keys = self.group_key(peers, rnd)
+        order = np.argsort(keys, kind="stable")
+        m = self.dims[rnd]
+        return [order[i * m:(i + 1) * m] for i in range(self.capacity // m)]
+
+    def partner_matrix(self, rnd: int) -> np.ndarray:
+        """[capacity, M] peer ids of each peer's round-``rnd`` group
+        (including itself), ordered by the struck-out coordinate."""
+        peers = np.arange(self.capacity)
+        c = self.coords(peers)                       # [P, d]
+        m = self.dims[rnd]
+        reps = np.repeat(c[:, None, :], m, axis=1)   # [P, M, d]
+        reps[:, :, rnd] = np.arange(m)[None, :]
+        return self.index(reps)
+
+
+def plan_grid(n_peers: int, group_size: int | None = None,
+              depth: int | None = None) -> GridPlan:
+    """Choose a grid for ``n_peers``.
+
+    Priority: (1) honor explicit (group_size, depth); (2) find uniform
+    M^d == N exactly (paper's optimal setup, e.g. 125 = 5^3); (3) smallest
+    capacity M^d >= N with M in [3..8] (padding with virtual dropped slots
+    — the appendix's approximate-aggregation regime).
+    """
+    if group_size is not None:
+        d = depth or max(1, round(math.log(max(n_peers, 2), group_size)))
+        while group_size ** d < n_peers:
+            d += 1
+        return GridPlan(n_peers, (group_size,) * d)
+    if depth is not None:
+        m = max(2, math.ceil(n_peers ** (1.0 / depth)))
+        return GridPlan(n_peers, (m,) * depth)
+    # exact factorization M^d == N, prefer smaller M (less per-round traffic)
+    for m in range(2, n_peers + 1):
+        d = round(math.log(n_peers, m))
+        for dd in (d, d + 1):
+            if dd >= 1 and m ** dd == n_peers:
+                if m == n_peers and dd == 1 and n_peers > 8:
+                    continue  # one giant group = all-to-all; keep searching
+                return GridPlan(n_peers, (m,) * dd)
+    # no exact power: minimal capacity >= N over M in [3..8]
+    best = None
+    for m in range(3, 9):
+        d = max(1, math.ceil(math.log(n_peers, m)))
+        cap = m ** d
+        cost = cap * d * (m - 1)  # per-iteration pairwise exchanges
+        if best is None or (cap, cost) < (best.capacity, best_cost):
+            best, best_cost = GridPlan(n_peers, (m,) * d), cost
+    return best
+
+
+def mesh_grid_plan(dp_axis_sizes: Sequence[int],
+                   factor_hints: dict | None = None) -> GridPlan:
+    """Map physical mesh DP axes onto a MAR grid (DESIGN.md §2).
+
+    Each DP mesh axis contributes its factors as MAR rounds; e.g.
+    data=16 -> (4, 4); multi-pod (pod=2, data=16) -> (2, 4, 4) with the
+    pod axis as the *outermost* round so DCN-crossing traffic happens in
+    exactly one of the d rounds.
+    """
+    factor_hints = factor_hints or {}
+    dims: List[int] = []
+    for i, size in enumerate(dp_axis_sizes):
+        fac = factor_hints.get(i)
+        if fac:
+            assert int(np.prod(fac)) == size, (fac, size)
+            dims.extend(fac)
+        else:
+            dims.extend(_balanced_factors(size))
+    n = int(np.prod(dp_axis_sizes))
+    return GridPlan(n, tuple(dims))
+
+
+def _balanced_factors(n: int) -> List[int]:
+    """Factor n into near-equal factors in [2..8], e.g. 16 -> [4, 4]."""
+    if n == 1:
+        return []
+    if n <= 8:
+        return [n]
+    for m in (4, 5, 6, 7, 8, 3, 2):
+        if n % m == 0:
+            return [m] + _balanced_factors(n // m)
+    return [n]  # prime > 8: single round
+
+
+# ---------------------------------------------------------------------------
+# Communication accounting (per paper §2.2)
+# ---------------------------------------------------------------------------
+
+def exchanges_per_iteration(plan: GridPlan) -> int:
+    """Total pairwise model exchanges in one FL iteration: each of the
+    capacity slots talks to (M_g - 1) peers in round g."""
+    return int(sum(plan.capacity * (m - 1) for m in plan.dims))
+
+
+def bytes_per_iteration(plan: GridPlan, model_bytes: int,
+                        allreduce: str = "butterfly") -> int:
+    """Data-plane bytes moved per FL iteration.
+
+    ``butterfly``: within a group of M peers, reduce-scatter + all-gather
+    moves 2*(M-1)/M * model_bytes per peer per round (bandwidth-optimal,
+    what Moshpit/Hivemind does inside a group). ``naive``: every peer
+    sends its full model to M-1 peers.
+    """
+    total = 0
+    for m in plan.dims:
+        if allreduce == "butterfly":
+            per_peer = 2.0 * (m - 1) / m * model_bytes
+        else:
+            per_peer = (m - 1) * model_bytes
+        total += int(plan.capacity * per_peer)
+    return total

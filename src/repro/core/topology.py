@@ -1,0 +1,123 @@
+"""Analytic communication-cost models for every technique (paper §2.2, §3).
+
+Byte accounting per FL iteration with ``n`` *aggregating* peers and model
+state of ``model_bytes`` (theta + momentum, both averaged by Alg. 1):
+
+* ``fedavg`` — upload + download per peer: ``2 n B``            (O(N))
+* ``ar``     — all-to-all, every peer sends to every other:
+               ``n (n-1) B``                                    (O(N^2))
+* ``rdfl``   — Galaxy-style ring circulation of full models:
+               every model traverses the ring: ``n (n-1) B``    (O(N^2));
+               differs from AR-FL in latency (n-1 sequential hops vs 1)
+* ``mar``    — G rounds, group size M, naive within-group exchange
+               (each peer sends its state to M-1 group mates):
+               ``n G (M-1) B``                                  (O(N log N))
+
+The MAR constant reproduces the paper's headline numbers: at N=125
+(M=5, G=3): 125*3*4 = 1500 model-units vs AR's 125*124 = 15500 — the
+"up to 10x" of Fig. 1 — and the Fig. 11 approximate-aggregation setting
+(M=3, G=4) gives 125*4*2 = 1000, the reported 33% reduction. A
+``butterfly`` mode (reduce-scatter + all-gather inside each group,
+2(M-1)/M per peer per round — what Moshpit-SGD itself implements) is the
+beyond-paper option benchmarked in EXPERIMENTS.md §Perf.
+
+MKD adds, per KD-enabled iteration, G rounds of *model-only* exchange
+(students pull candidate-teacher weights; Alg. 3) plus logit traffic.
+
+Control plane: DHT coordination is O(N log N) small messages/iteration
+(§2.2) — tracked separately, negligible vs data plane.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.moshpit import GridPlan
+
+PyTree = Any
+
+DHT_MSG_BYTES = 64  # one Kademlia get/store record (key+value+routing)
+
+
+def pytree_bytes(tree: PyTree) -> int:
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def mar_bytes(n: int, plan: GridPlan, model_bytes: int,
+              num_rounds: Optional[int] = None,
+              mode: str = "naive") -> int:
+    """Data-plane bytes for one MAR aggregation over ``n`` active peers."""
+    rounds = plan.depth if num_rounds is None else num_rounds
+    total = 0.0
+    for g in range(rounds):
+        m = plan.dims[g % plan.depth]
+        if mode == "butterfly":
+            per_peer = 2.0 * (m - 1) / m
+        else:
+            per_peer = float(m - 1)
+        total += n * per_peer * model_bytes
+    return int(total)
+
+
+def iteration_bytes(technique: str, n: int, model_bytes: int,
+                    plan: Optional[GridPlan] = None,
+                    num_rounds: Optional[int] = None,
+                    use_kd: bool = False, kd_logit_bytes: int = 0,
+                    mode: str = "naive") -> int:
+    """Total data-plane bytes of one FL iteration."""
+    if technique == "fedavg":
+        data = 2 * n * model_bytes
+    elif technique in ("ar", "rdfl"):
+        data = n * max(n - 1, 0) * model_bytes
+    elif technique == "mar":
+        assert plan is not None
+        data = mar_bytes(n, plan, model_bytes, num_rounds, mode)
+    else:
+        raise ValueError(technique)
+    if use_kd and technique == "mar":
+        # students pull group-mates' thetas (half the (theta, m) state)
+        data += mar_bytes(n, plan, model_bytes // 2, num_rounds, "naive")
+        rounds = plan.depth if num_rounds is None else num_rounds
+        data += n * rounds * kd_logit_bytes
+    return int(data)
+
+
+def iteration_latency_rounds(technique: str, n: int,
+                             plan: Optional[GridPlan] = None,
+                             num_rounds: Optional[int] = None) -> int:
+    """Sequential communication rounds per iteration (latency proxy)."""
+    if technique == "fedavg":
+        return 2                      # upload, download
+    if technique == "ar":
+        return 1                      # fully parallel exchange
+    if technique == "rdfl":
+        return max(n - 1, 1)          # ring circulation
+    if technique == "mar":
+        return plan.depth if num_rounds is None else num_rounds
+    raise ValueError(technique)
+
+
+def control_plane_bytes(n: int) -> int:
+    """DHT coordination per iteration: O(N log N) lookups (§2.2)."""
+    return int(n * max(math.log2(max(n, 2)), 1.0) * DHT_MSG_BYTES)
+
+
+def complexity_table(model_bytes: int, peer_counts=(16, 64, 125, 512, 4096)
+                     ) -> "list[dict]":
+    """Fig. 1-style scaling table across techniques."""
+    from repro.core.moshpit import plan_grid
+    rows = []
+    for n in peer_counts:
+        plan = plan_grid(n)
+        for tech in ("fedavg", "mar", "rdfl", "ar"):
+            rows.append(dict(
+                technique=tech, n_peers=n,
+                bytes=iteration_bytes(tech, n, model_bytes, plan),
+                rounds=iteration_latency_rounds(tech, n, plan),
+                control_bytes=control_plane_bytes(n) if tech == "mar" else 0,
+            ))
+    return rows

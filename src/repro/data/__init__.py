@@ -1,0 +1,3 @@
+from repro.data.synthetic import (classification_task, lm_token_stream,
+                                  TaskSpec)
+from repro.data.partition import dirichlet_partition, partition_stats

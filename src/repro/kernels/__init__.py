@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (interpret-mode validated on CPU; see ops.py)."""
+from repro.kernels import ops, ref

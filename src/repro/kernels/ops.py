@@ -1,0 +1,69 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute through the Pallas
+interpreter (``interpret=True`` — the kernel body runs in Python,
+semantics-exact); on TPU set ``REPRO_PALLAS_INTERPRET=0`` (or rely on
+the default platform check) for compiled Mosaic kernels.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.group_mean import group_mean_fwd
+from repro.kernels.ssd_scan import ssd_scan_fwd
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _check(cond, msg):
+    if not cond:
+        raise ValueError(msg)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q: Array, k: Array, v: Array,
+                    causal: bool = True) -> Array:
+    """q [b,s,h,d]; k,v [b,skv,kvh,d] -> [b,s,h,d]."""
+    _check(q.ndim == 4 and k.ndim == 4 and v.ndim == 4, "rank-4 inputs")
+    _check(k.shape == v.shape, "k/v shape mismatch")
+    _check(q.shape[3] == k.shape[3], "head_dim mismatch")
+    _check(q.shape[2] % k.shape[2] == 0, "GQA heads must divide")
+    return flash_attention_fwd(q, k, v, causal, interpret=_interpret())
+
+
+@jax.jit
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     lengths: Array) -> Array:
+    """q [b,h,d]; caches [b,S,kvh,d]; lengths [b] -> [b,h,d]."""
+    _check(q.ndim == 3 and k_cache.ndim == 4, "bad ranks")
+    _check(q.shape[2] == k_cache.shape[3], "head_dim mismatch")
+    return decode_attention_fwd(q, k_cache, v_cache, lengths,
+                                interpret=_interpret())
+
+
+@jax.jit
+def ssd_scan(q: Array, k: Array, v: Array, log_a: Array, h0: Array):
+    """Chunked gated linear recurrence; see ssd_scan.py."""
+    _check(q.shape == k.shape, "q/k shape mismatch")
+    _check(q.shape[:3] == v.shape[:3], "v batch/seq mismatch")
+    return ssd_scan_fwd(q, k, v, log_a, h0, interpret=_interpret())
+
+
+@jax.jit
+def group_mean(x: Array, mask: Array) -> Array:
+    """Masked MAR group mean; x [G, M, D], mask [G, M]."""
+    _check(x.ndim == 3 and mask.shape == x.shape[:2], "bad shapes")
+    return group_mean_fwd(x, mask, interpret=_interpret())

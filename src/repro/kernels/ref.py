@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+Each function is the semantic ground truth at f32 precision with no
+blocking — the kernels must match these for every swept (shape, dtype).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array,
+                        causal: bool = True) -> Array:
+    """q [b,s,h,d]; k,v [b,skv,kvh,d] -> [b,s,h,d] (GQA, causal)."""
+    b, s, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, d)
+    sc = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) / np.sqrt(d)
+    if causal:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(skv)[None, :]
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, s, h, d).astype(q.dtype)
+
+
+def decode_attention_ref(q: Array, k_cache: Array, v_cache: Array,
+                         lengths: Array) -> Array:
+    """q [b,h,d]; caches [b,S,kvh,d]; lengths [b] -> [b,h,d].
+
+    Attends to positions < lengths[b] (the filled prefix of the cache).
+    """
+    b, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                    k_cache.astype(jnp.float32)) / np.sqrt(d)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)
+
+
+def ssd_scan_ref(q: Array, k: Array, v: Array, log_a: Array,
+                 h0: Array) -> Tuple[Array, Array]:
+    """Gated linear recurrence (Mamba2 SSD / mLSTM shared primitive).
+
+    q,k [b,nh,S,dk]; v [b,nh,S,dv]; log_a [b,nh,S] (<=0);
+    h0 [b,nh,dk,dv].  Sequential-scan ground truth:
+        H_t = exp(a_t) H_{t-1} + k_t^T v_t;   y_t = q_t . H_t
+    """
+    def step(h, xs):
+        qt, kt, vt, at = xs
+        h = h * jnp.exp(at.astype(jnp.float32))[..., None, None] + \
+            jnp.einsum("bhd,bhv->bhdv", kt.astype(jnp.float32),
+                       vt.astype(jnp.float32))
+        y = jnp.einsum("bhd,bhdv->bhv", qt.astype(jnp.float32), h)
+        return h, y
+
+    xs = (jnp.moveaxis(q, 2, 0), jnp.moveaxis(k, 2, 0),
+          jnp.moveaxis(v, 2, 0), jnp.moveaxis(log_a, 2, 0))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2).astype(v.dtype), h_final
+
+
+def group_mean_ref(x: Array, mask: Array) -> Array:
+    """Masked group mean (MAR aggregation hot spot).
+
+    x [G, M, D]; mask [G, M] -> [G, M, D]: every slot receives its
+    group's masked mean; empty groups keep their own values.
+    """
+    m = mask[..., None].astype(jnp.float32)
+    num = jnp.sum(x.astype(jnp.float32) * m, axis=1, keepdims=True)
+    den = jnp.sum(m, axis=1, keepdims=True)
+    mean = num / jnp.maximum(den, 1.0)
+    out = jnp.where(den > 0, mean, x.astype(jnp.float32))
+    return jnp.broadcast_to(out, x.shape).astype(x.dtype)

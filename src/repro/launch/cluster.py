@@ -1,0 +1,98 @@
+"""Multi-host bootstrap for real pod deployments.
+
+The dry-run proves the mesh compiles; this module is the glue an actual
+multi-pod launch uses: per-host `jax.distributed.initialize`, env-based
+topology discovery (GKE/TPU-VM/SLURM conventions), and the guard rails
+for elastic restarts.
+
+Supported environments (first match wins):
+  * explicit flags / env: REPRO_COORDINATOR, REPRO_NUM_PROCESSES,
+    REPRO_PROCESS_ID
+  * SLURM: SLURM_STEP_NODELIST / SLURM_NTASKS / SLURM_PROCID
+  * TPU pod runtime: jax.distributed.initialize() auto-detect (no args)
+
+Usage on every host:
+
+    from repro.launch.cluster import initialize_cluster
+    info = initialize_cluster()          # safe no-op on single host
+    mesh = make_production_mesh(multi_pod=info.num_processes > 1)
+
+`scripts/run_pod.sh` shows the scheduler-side invocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import socket
+from typing import Optional
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterInfo:
+    coordinator: Optional[str]
+    num_processes: int
+    process_id: int
+    initialized: bool
+
+    @property
+    def is_coordinator(self) -> bool:
+        return self.process_id == 0
+
+
+def _first_host(nodelist: str) -> str:
+    """SLURM nodelist -> first hostname ('node[003-008]' -> 'node003')."""
+    m = re.match(r"([^\[,]+)(?:\[(\d+)[-,\d]*\])?", nodelist)
+    if not m:
+        return nodelist.split(",")[0]
+    base, first = m.group(1), m.group(2)
+    return f"{base}{first}" if first else base
+
+
+def detect_topology() -> ClusterInfo:
+    env = os.environ
+    if "REPRO_NUM_PROCESSES" in env:
+        return ClusterInfo(
+            coordinator=env.get("REPRO_COORDINATOR",
+                                f"{socket.gethostname()}:8476"),
+            num_processes=int(env["REPRO_NUM_PROCESSES"]),
+            process_id=int(env.get("REPRO_PROCESS_ID", "0")),
+            initialized=False)
+    if "SLURM_NTASKS" in env and int(env["SLURM_NTASKS"]) > 1:
+        host = _first_host(env.get("SLURM_STEP_NODELIST",
+                                   env.get("SLURM_NODELIST", "")))
+        return ClusterInfo(
+            coordinator=f"{host}:8476",
+            num_processes=int(env["SLURM_NTASKS"]),
+            process_id=int(env.get("SLURM_PROCID", "0")),
+            initialized=False)
+    return ClusterInfo(coordinator=None, num_processes=1, process_id=0,
+                       initialized=False)
+
+
+def initialize_cluster(timeout_s: int = 300) -> ClusterInfo:
+    """Idempotent multi-host init; single-host is a no-op."""
+    info = detect_topology()
+    if info.num_processes <= 1:
+        return dataclasses.replace(info, initialized=False)
+    jax.distributed.initialize(
+        coordinator_address=info.coordinator,
+        num_processes=info.num_processes,
+        process_id=info.process_id,
+        initialization_timeout=timeout_s)
+    return dataclasses.replace(info, initialized=True)
+
+
+def assert_mesh_feasible(num_hosts: int, chips_per_host: int,
+                         mesh_shape) -> None:
+    """Fail fast before compile when the scheduler allocation can't
+    realize the requested mesh."""
+    import numpy as np
+    need = int(np.prod(mesh_shape))
+    have = num_hosts * chips_per_host
+    if have < need:
+        raise RuntimeError(
+            f"mesh {tuple(mesh_shape)} needs {need} chips; allocation has "
+            f"{num_hosts} hosts x {chips_per_host} = {have}")

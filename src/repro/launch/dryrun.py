@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each
+cell we build the production mesh, shard the (state, batch) specs, and
+``jax.jit(step).lower(...).compile()``. Success means the sharding
+rules, the MAR collective schedule, and the memory layout are mutually
+consistent; ``memory_analysis()`` / ``cost_analysis()`` feed the
+roofline table (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out results.json
+  python -m repro.launch.dryrun --all --mesh both --out results.json
+
+The XLA_FLAGS line above MUST run before any jax import (device count
+locks on first init) — keep this module free of global jax state.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, shape_applicable
+from repro.configs.registry import ARCH_IDS, get_config, get_shape
+from repro.core.fl_device import (fl_state_shape, make_fl_train_step,
+                                  make_prefill_step, make_serve_step)
+from repro.launch.mesh import make_production_mesh, production_plans
+from repro.models.model import Model, batch_specs, input_specs
+from repro.runtime import roofline
+from repro.runtime.sharding import (batch_shardings, cache_shardings,
+                                    state_shardings)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def dryrun_cell(arch_id: str, shape_id: str, multi_pod: bool,
+                peer_axes: Optional[tuple] = None, one_shot: bool = False,
+                local_steps: int = 1, n_micro: Optional[int] = None,
+                momentum_dtype: str = "float32",
+                comm_dtype: Optional[str] = None,
+                overrides: Optional[Dict[str, Any]] = None,
+                verbose: bool = True) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the roofline record.
+
+    ``overrides`` patches ModelConfig fields (e.g. attn_impl="xla") for
+    §Perf before/after comparisons.
+    """
+    import dataclasses
+    cfg = get_config(arch_id)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = get_shape(shape_id)
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch_id, "shape": shape_id, "status": "skipped",
+                "reason": "long_500k needs sub-quadratic attention "
+                          "(DESIGN.md §4)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    splan, grid = production_plans(mesh, peer_axes)
+    model = Model(cfg)
+    mesh_name = "multi-pod-2x16x16" if multi_pod else "single-pod-16x16"
+    chips = mesh.devices.size
+    t0 = time.time()
+    head_kw = dict(head_dim=cfg.head_dim, num_heads=cfg.num_heads,
+                   num_kv_heads=cfg.num_kv_heads)
+
+    if shape.kind == "train":
+        n_micro = n_micro or default_n_micro(cfg, shape, splan)
+        state_shape = fl_state_shape(model, splan.n_peers, momentum_dtype)
+        batch = batch_specs(cfg, shape, splan.n_peers, local_steps, n_micro)
+        step = make_fl_train_step(model, grid, one_shot=one_shot,
+                                  comm_dtype=comm_dtype)
+        in_sh = (state_shardings(state_shape, splan, **head_kw),
+                 batch_shardings(batch, splan))
+        out_sh = (state_shardings(state_shape, splan, **head_kw),
+                  jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                               {"loss": 0.0}))
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(state_shape, batch)
+            compiled = lowered.compile()
+    elif shape.kind == "prefill":
+        params = model.init_shape()
+        batch = batch_specs(cfg, shape)
+        step = make_prefill_step(model)
+        serve_plan = _serve_plan(splan)
+        # shard the cache the step actually emits (hybrid prefill caches
+        # omit the conv state — see transformer.forward collect_cache)
+        _, out_cache_shape = jax.eval_shape(step, params, batch)
+        cache_sh = cache_shardings(out_cache_shape, serve_plan,
+                                   shape.global_batch)
+        in_sh = (state_shardings(params, serve_plan, peer_stacked=False,
+                                 **head_kw),
+                 batch_shardings(batch, serve_plan, peer_leading=False))
+        out_sh = (NamedSharding(mesh, P()), cache_sh)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(params, batch)
+            compiled = lowered.compile()
+    else:  # decode / long_decode
+        params = model.init_shape()
+        specs = input_specs(cfg, shape)
+        step = make_serve_step(model)
+        serve_plan = _serve_plan(splan)
+        cache_sh = cache_shardings(specs["cache"], serve_plan,
+                                   shape.global_batch)
+        tok_sh = batch_shardings({"t": specs["token"]}, serve_plan,
+                                 peer_leading=False)["t"]
+        in_sh = (state_shardings(params, serve_plan, peer_stacked=False,
+                                 **head_kw),
+                 cache_sh, tok_sh)
+        out_sh = (tok_sh, cache_sh)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(
+                params, specs["cache"], specs["token"])
+            compiled = lowered.compile()
+
+    report = roofline.analyze(
+        compiled, arch=arch_id, shape=shape_id, mesh=mesh_name, chips=chips,
+        model_flops=roofline.model_flops_estimate(cfg, shape, shape.kind))
+    rec = report.to_dict()
+    rec.update(status="ok", compile_s=round(time.time() - t0, 1),
+               n_peers=splan.n_peers, grid_dims=list(grid.dims),
+               local_steps=local_steps, one_shot=one_shot,
+               overrides=overrides or {},
+               peer_axes=list(splan.peer_axes))
+    if verbose:
+        ma = rec["memory_per_chip"]
+        print(f"[{arch_id} x {shape_id} x {mesh_name}] OK "
+              f"({rec['compile_s']}s)\n"
+              f"  per-chip: {ma.get('total_bytes', 0)/2**30:.2f} GiB "
+              f"({ma.get('hbm_fraction', 0)*100:.0f}% of v5e HBM) | "
+              f"flops/chip {rec['hlo_flops_per_chip']:.3e} | "
+              f"coll/chip {rec['collective_bytes_per_chip']/2**20:.1f} MiB\n"
+              f"  terms (s): compute {rec['compute_s']:.4f} "
+              f"memory {rec['memory_s']:.4f} "
+              f"collective {rec['collective_s']:.4f} "
+              f"-> {rec['dominant']}-bound | MFU {rec['mfu']*100:.1f}%")
+    return rec
+
+
+def _serve_plan(splan):
+    """Serving has no peers: all DP axes become FSDP."""
+    from repro.runtime.sharding import make_shard_plan
+    return make_shard_plan(splan.mesh, peer_axes=())
+
+
+def default_n_micro(cfg, shape, splan) -> int:
+    """Pick microbatch count so per-chip live activations stay ~<2 GiB
+    under remat (stored boundary = mb*seq*d_model bf16 per layer)."""
+    per_peer = shape.global_batch // splan.n_peers
+    fsdp = splan.axis_size(splan.fsdp_axes)
+    budget = 2 * 2 ** 30
+    layers = cfg.num_layers
+    for n_micro in (1, 2, 4, 8, 16, 32):
+        mb = per_peer // n_micro
+        if mb < max(fsdp, 1):
+            break
+        live = layers * mb * shape.seq_len * cfg.d_model * 2 // max(fsdp, 1)
+        if live <= budget:
+            return n_micro
+    return max(per_peer // max(fsdp, 1), 1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default=None, choices=["single", "multi",
+                                                     "both"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--one-shot", action="store_true",
+                    help="fuse MAR rounds into one all-reduce (perf variant)")
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--peer-axes", default=None,
+                    help="comma list, e.g. 'pod' for 2 big peers")
+    ap.add_argument("--momentum-dtype", default="float32")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.mesh == "both":
+        meshes = [False, True]
+    elif args.mesh:
+        meshes = [args.mesh == "multi"]
+    else:
+        meshes = [args.multi_pod]
+    peer_axes = tuple(args.peer_axes.split(",")) if args.peer_axes else None
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape_id in SHAPES:
+                cells.append((arch, shape_id))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    records, failures = [], 0
+    for multi_pod in meshes:
+        for arch, shape_id in cells:
+            try:
+                rec = dryrun_cell(arch, shape_id, multi_pod,
+                                  peer_axes=peer_axes,
+                                  one_shot=args.one_shot,
+                                  local_steps=args.local_steps,
+                                  n_micro=args.n_micro,
+                                  momentum_dtype=args.momentum_dtype)
+            except Exception as e:  # a failing cell is a bug in the system
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape_id,
+                       "mesh": "multi" if multi_pod else "single",
+                       "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            records.append(rec)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {len(records)} records -> {args.out}")
+    ok = sum(1 for r in records if r.get("status") == "ok")
+    sk = sum(1 for r in records if r.get("status") == "skipped")
+    print(f"dry-run: {ok} ok, {sk} skipped, {failures} FAILED")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,61 @@
+"""Production mesh construction (functions only — importing this module
+never touches jax device state).
+
+Meshes (DESIGN.md §5):
+  single-pod: (data=16, model=16)            — 256 chips
+  multi-pod : (pod=2, data=16, model=16)     — 512 chips
+
+MAR peer mapping:
+  single-pod: peers = "data" axis -> 16 peers on a 4x4 MAR grid
+  multi-pod : peers = ("pod", "data") -> 32 peers on a (2,4,4) grid with
+              the pod axis as the *outermost* MAR round, so DCN-crossing
+              traffic happens in exactly one of the three rounds.
+  big-model fallback (``peer_axes=("pod",)``): 2 peers, FSDP over "data"
+  — used when per-peer state exceeds 16 TP chips' HBM (kimi-k2 1T).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.moshpit import GridPlan, mesh_grid_plan
+from repro.runtime.sharding import ShardPlan, make_shard_plan
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) != n:
+        if len(devices) < n:
+            raise RuntimeError(
+                f"need {n} devices, have {len(devices)} — the dry-run "
+                f"entry point must set XLA_FLAGS device count first")
+        devices = devices[:n]
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(shape), axes)
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Reduced mesh for CPU tests (requires forced host device count)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(jax.devices())}")
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def production_plans(mesh, peer_axes: Optional[Sequence[str]] = None
+                     ) -> Tuple[ShardPlan, GridPlan]:
+    """(ShardPlan, MAR GridPlan) for a production mesh."""
+    names = mesh.axis_names
+    if peer_axes is None:
+        peer_axes = ("pod", "data") if "pod" in names else ("data",)
+    splan = make_shard_plan(mesh, peer_axes)
+    sizes = [mesh.shape[a] for a in splan.peer_axes]
+    grid = mesh_grid_plan(sizes)
+    return splan, grid

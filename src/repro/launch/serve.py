@@ -1,0 +1,83 @@
+"""Batched decode serving driver (prefill -> decode with KV/state cache).
+
+Serves a (smoke or full) architecture: prefill the prompt batch in one
+forward pass, then greedy-decode tokens step by step. On CPU this runs
+reduced configs end-to-end; the production shapes are exercised by the
+dry-run (decode_32k / long_500k cells).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch zamba2-2.7b --smoke \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.core.fl_device import make_prefill_step, make_serve_step
+from repro.models.model import Model
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = Model(cfg)
+    rng = np.random.default_rng(args.seed)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    max_len = args.prompt_len + args.gen
+
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size,
+                     size=(args.batch, args.prompt_len)), jnp.int32)
+    batch = {"tokens": prompts}
+    if cfg.frontend != "none":
+        from repro.models.transformer import PREFIX_LEN
+        p = PREFIX_LEN[cfg.frontend]
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.normal(size=(args.batch, p, cfg.d_model)), jnp.float32)
+
+    # Prefill: logits for the last prompt position (cache is rebuilt in
+    # decode form below — the production handoff pads prefill KV into the
+    # ring/linear cache; on smoke scale we simply replay the prompt).
+    prefill = jax.jit(make_prefill_step(model))
+    t0 = time.time()
+    last_logits, _ = prefill(params, batch)
+    print(f"[serve] prefill {args.batch}x{args.prompt_len} "
+          f"in {time.time()-t0:.2f}s")
+
+    serve = jax.jit(make_serve_step(model))
+    cache = model.init_cache(args.batch, max_len)
+    # replay prompt tokens through decode steps to fill the cache
+    tok = prompts[:, 0]
+    for i in range(args.prompt_len):
+        nxt, cache = serve(params, cache, prompts[:, i])
+    generated = [nxt]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        nxt, cache = serve(params, cache, generated[-1])
+        generated.append(nxt)
+    dt = time.time() - t0
+    out = jnp.stack(generated, axis=1)
+    print(f"[serve] generated {args.gen} tokens/seq x{args.batch} in "
+          f"{dt:.2f}s ({args.gen*args.batch/max(dt,1e-9):.1f} tok/s)")
+    print("[serve] sample:", np.asarray(out[0])[:16].tolist())
+    agree = float(jnp.mean((jnp.argmax(last_logits, -1) == generated[0])
+                           .astype(jnp.float32)))
+    print(f"[serve] prefill/decode first-token agreement: {agree:.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,114 @@
+"""MAR-FL training driver for the assigned LM architectures.
+
+Runs real steps on the available devices (CPU here, reduced configs) or
+lowers the production config under the dry-run entry point. Integrates
+the full stack: config registry, synthetic LM pipeline, device-backend
+MAR-FL step, checkpoint/restart, health tracking, straggler masks.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+      --smoke --steps 20 --peers 4 --ckpt-dir /tmp/ck
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m --smoke \
+      --steps 10 --resume --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.core.fl_device import init_fl_state, make_fl_train_step
+from repro.core.moshpit import plan_grid
+from repro.data.synthetic import lm_token_stream
+from repro.models.model import Model
+from repro.runtime.fault import HealthTracker, StragglerPolicy
+from repro.runtime.metrics import MetricsLogger
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--peers", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=2, help="per peer")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--one-shot", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--metrics", default=None,
+                    help="JSONL metrics path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = Model(cfg)
+    grid = plan_grid(args.peers)
+    print(f"[train] arch={cfg.name} peers={args.peers} "
+          f"grid={grid.dims} params={cfg.param_count():,}")
+
+    step_fn = jax.jit(make_fl_train_step(
+        model, grid, lr=args.lr, one_shot=args.one_shot))
+
+    state = init_fl_state(model, args.peers, jax.random.PRNGKey(args.seed))
+    start = 0
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        state, meta = ckpt.restore_elastic(args.peers, like=state)
+        start = meta.get("step", 0)
+        print(f"[train] resumed from step {start} "
+              f"(was {meta.get('n_peers')} peers)")
+
+    stream = lm_token_stream(cfg.vocab_size, args.peers * args.local_steps
+                             * args.batch, args.seq, seed=args.seed)
+    health = HealthTracker(args.peers)
+    straggler = StragglerPolicy()
+    metrics_log = MetricsLogger(args.metrics)
+
+    for t in range(start, start + args.steps):
+        raw = next(stream)
+        batch = {
+            k: v.reshape(args.peers, args.local_steps, 1, args.batch,
+                         args.seq)
+            for k, v in raw.items()
+        }
+        t0 = time.time()
+        state, metrics = step_fn(state, batch)
+        dt = time.time() - t0
+        for p in range(args.peers):
+            health.heartbeat(p, dt)
+        metrics_log.log(t + 1, tokens=args.peers * args.local_steps
+                        * args.batch * args.seq,
+                        loss=float(metrics["loss"]))
+        if (t + 1) % 5 == 0 or t == start:
+            print(f"  step {t+1:4d} loss={float(metrics['loss']):.4f} "
+                  f"({dt*1e3:.0f} ms)")
+        if ckpt and (t + 1) % args.ckpt_every == 0:
+            ckpt.save(t + 1, state,
+                      metadata={"step": t + 1, "n_peers": args.peers,
+                                "grid_dims": list(grid.dims),
+                                "arch": cfg.name},
+                      blocking=False)
+    if ckpt:
+        ckpt.save(start + args.steps, state,
+                  metadata={"step": start + args.steps,
+                            "n_peers": args.peers,
+                            "grid_dims": list(grid.dims),
+                            "arch": cfg.name})
+        ckpt.wait()
+        print(f"[train] checkpointed at {start + args.steps}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,167 @@
+"""Flash-style causal GQA attention in pure JAX with a custom VJP.
+
+Why this exists: differentiating naive chunked attention makes XLA save
+the softmax probabilities ([seq, seq] f32 per layer per microbatch) for
+the backward pass — the dry-run roofline showed this dominating HBM
+traffic at seq 4096+. The flash pattern saves only (o, logsumexp) and
+*recomputes* probabilities blockwise in the backward — paying ~2.5x
+attention FLOPs to kill O(s^2) memory traffic (EXPERIMENTS.md §Perf,
+iteration "naive->flash").
+
+This module is also the semantics reference for the Pallas TPU kernel
+(``repro.kernels.flash_attention``): same blocking, same online-softmax
+recurrences, validated against ``kernels/ref.py``.
+
+Shapes: q [b, s, h, d]; k, v [b, skv, kvh, d]; GQA via h = g * kvh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _chunks(s: int, target: int) -> int:
+    c = min(target, s)
+    while s % c != 0:
+        c -= 1
+    return c
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q: Array, k: Array, v: Array, causal: bool = True,
+                    q_chunk: int = 1024, kv_chunk: int = 2048) -> Array:
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk):
+    b, s, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qc = _chunks(s, q_chunk)
+    kc = _chunks(skv, kv_chunk)
+    nq, nk = s // qc, skv // kc
+    scale = 1.0 / np.sqrt(d)
+
+    # [b, kvh, g, s, d] view for grouped heads
+    qg = q.reshape(b, s, kvh, g, d).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)                     # [b, kvh, skv, d]
+    vg = v.transpose(0, 2, 1, 3)
+
+    def q_block(iq):
+        q_i = jax.lax.dynamic_slice_in_dim(qg, iq * qc, qc, axis=3)
+        q_pos = iq * qc + jnp.arange(qc)
+
+        def kv_step(carry, ik):
+            o, m, l = carry
+            k_j = jax.lax.dynamic_slice_in_dim(kg, ik * kc, kc, axis=2)
+            v_j = jax.lax.dynamic_slice_in_dim(vg, ik * kc, kc, axis=2)
+            sc = jnp.einsum("bkgqd,bksd->bkgqs", q_i.astype(jnp.float32),
+                            k_j.astype(jnp.float32)) * scale
+            if causal:
+                kv_pos = ik * kc + jnp.arange(kc)
+                mask = q_pos[:, None] >= kv_pos[None, :]
+                sc = jnp.where(mask, sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, v_j.astype(jnp.float32))
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((b, kvh, g, qc, d), jnp.float32)
+        m0 = jnp.full((b, kvh, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(kv_step, (o0, m0, l0), jnp.arange(nk))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return o.astype(q.dtype), lse
+
+    outs, lses = jax.lax.map(q_block, jnp.arange(nq))
+    # outs: [nq, b, kvh, g, qc, d] -> [b, s, h, d]
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, kvh, g, s, d)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, kvh, g, s)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, q_chunk, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse = res
+    b, s, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qc = _chunks(s, q_chunk)
+    kc = _chunks(skv, kv_chunk)
+    nq, nk = s // qc, skv // kc
+    scale = 1.0 / np.sqrt(d)
+
+    qg = q.reshape(b, s, kvh, g, d).transpose(0, 2, 3, 1, 4)
+    og = out.reshape(b, s, kvh, g, d).transpose(0, 2, 3, 1, 4)
+    dog = dout.reshape(b, s, kvh, g, d).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    # delta = rowsum(dO * O)  [b, kvh, g, s]
+    delta = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), -1)
+
+    def kv_block(ik):
+        k_j = jax.lax.dynamic_slice_in_dim(kg, ik * kc, kc, axis=2)
+        v_j = jax.lax.dynamic_slice_in_dim(vg, ik * kc, kc, axis=2)
+        kv_pos = ik * kc + jnp.arange(kc)
+
+        def q_step(carry, iq):
+            dk, dv = carry
+            q_i = jax.lax.dynamic_slice_in_dim(qg, iq * qc, qc, axis=3)
+            do_i = jax.lax.dynamic_slice_in_dim(dog, iq * qc, qc, axis=3)
+            lse_i = jax.lax.dynamic_slice_in_dim(lse, iq * qc, qc, axis=3)
+            dl_i = jax.lax.dynamic_slice_in_dim(delta, iq * qc, qc, axis=3)
+            sc = jnp.einsum("bkgqd,bksd->bkgqs", q_i.astype(jnp.float32),
+                            k_j.astype(jnp.float32)) * scale
+            if causal:
+                q_pos = iq * qc + jnp.arange(qc)
+                mask = q_pos[:, None] >= kv_pos[None, :]
+                sc = jnp.where(mask, sc, NEG_INF)
+            p = jnp.exp(sc - lse_i[..., None])               # true probs
+            dp = jnp.einsum("bkgqd,bksd->bkgqs",
+                            do_i.astype(jnp.float32),
+                            v_j.astype(jnp.float32))
+            ds = p * (dp - dl_i[..., None]) * scale
+            dk = dk + jnp.einsum("bkgqs,bkgqd->bksd", ds,
+                                 q_i.astype(jnp.float32))
+            dv = dv + jnp.einsum("bkgqs,bkgqd->bksd", p,
+                                 do_i.astype(jnp.float32))
+            dq_i = jnp.einsum("bkgqs,bksd->bkgqd", ds,
+                              k_j.astype(jnp.float32))
+            return (dk, dv), dq_i
+
+        dk0 = jnp.zeros((b, kvh, kc, d), jnp.float32)
+        dv0 = jnp.zeros((b, kvh, kc, d), jnp.float32)
+        (dk, dv), dq_parts = jax.lax.scan(q_step, (dk0, dv0),
+                                          jnp.arange(nq))
+        return dk, dv, dq_parts            # dq_parts: [nq, b, kvh, g, qc, d]
+
+    dks, dvs, dqs = jax.lax.map(kv_block, jnp.arange(nk))
+    # dks: [nk, b, kvh, kc, d] -> [b, nk, kc, kvh, d] -> [b, skv, kvh, d]
+    dk = dks.transpose(1, 0, 3, 2, 4).reshape(b, skv, kvh, d)
+    dv = dvs.transpose(1, 0, 3, 2, 4).reshape(b, skv, kvh, d)
+    # dqs: [nk, nq, b, kvh, g, qc, d] — sum over kv blocks
+    dq = jnp.sum(dqs, axis=0)              # [nq, b, kvh, g, qc, d]
+    dq = dq.transpose(1, 2, 3, 0, 4, 5).reshape(b, kvh, g, s, d)
+    dq = dq.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,120 @@
+"""Model facade: one object per architecture config.
+
+``Model`` bundles init / loss / decode for any of the 10 assigned
+architectures; ``input_specs`` produces ShapeDtypeStruct stand-ins for
+every input of the lowered step (the dry-run's no-allocation path).
+
+Modality frontends (pixtral / musicgen) are stubs per the brief: the
+batch carries precomputed patch/frame embeddings ``prefix_embeds``
+[b, P, d_model] feeding the transformer backbone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.transformer import PREFIX_LEN
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init(self, key: Array) -> PyTree:
+        return T.init_params(self.cfg, key)
+
+    def init_shape(self) -> PyTree:
+        """Param ShapeDtypeStructs without allocating (dry-run path)."""
+        return jax.eval_shape(lambda: T.init_params(
+            self.cfg, jax.random.PRNGKey(0)))
+
+    def loss(self, params: PyTree, batch: Dict[str, Array]) -> Array:
+        return T.lm_loss(params, batch, self.cfg)
+
+    def forward(self, params: PyTree, tokens: Array, **kw):
+        return T.forward(params, tokens, self.cfg, **kw)
+
+    def init_cache(self, batch: int, max_len: int) -> PyTree:
+        return T.init_cache(self.cfg, batch, max_len)
+
+    def cache_shape(self, batch: int, max_len: int) -> PyTree:
+        return jax.eval_shape(
+            lambda: T.init_cache(self.cfg, batch, max_len))
+
+    def decode_step(self, params: PyTree, cache: PyTree, token: Array
+                    ) -> Tuple[Array, PyTree]:
+        return T.decode_step(params, cache, token, self.cfg)
+
+    @property
+    def has_frontend(self) -> bool:
+        return self.cfg.frontend != "none"
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; dry-run never allocates)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                n_peers: int = 1, local_steps: int = 1,
+                n_micro: int = 1) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Train/prefill batch stand-ins.
+
+    Train batches carry the FL structure [n_peers, local_steps, n_micro,
+    micro_batch, seq]: B local Momentum-SGD steps per peer (Alg. 1), each
+    accumulating over n_micro microbatches.
+    """
+    f32, i32 = jnp.float32, jnp.int32
+    gb, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        assert gb % (n_peers * local_steps * n_micro) == 0, \
+            (gb, n_peers, local_steps, n_micro)
+        mb = gb // (n_peers * local_steps * n_micro)
+        lead = (n_peers, local_steps, n_micro, mb)
+    else:  # prefill: flat per-request batch
+        lead = (gb,)
+    s_text = s
+    specs = {}
+    if cfg.frontend != "none":
+        p = PREFIX_LEN[cfg.frontend]
+        s_text = s - p
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            lead + (p, cfg.d_model), f32)
+    specs["tokens"] = jax.ShapeDtypeStruct(lead + (s_text,), i32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct(lead + (s_text,), i32)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, n_peers: int = 1,
+                local_steps: int = 1, n_micro: int = 1) -> Dict[str, Any]:
+    """All inputs of the lowered step for one (arch x shape) cell.
+
+    * train   -> {"batch": ...} for ``fl_train_step`` (state passed
+                 separately as eval_shape'd pytree)
+    * prefill -> {"batch": ...} for ``prefill_step``
+    * decode / long_decode -> {"token": [b], "cache": ...} for
+      ``serve_step``; the cache covers ``seq_len`` history (window/state
+      caches for hybrid/ssm are O(window)/O(1) — the long_500k point).
+    """
+    model = Model(cfg)
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, n_peers, local_steps,
+                                     n_micro)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape)}
+    # decode shapes
+    b = shape.global_batch
+    cache = model.cache_shape(b, shape.seq_len)
+    # decode starts from a full history: pos = seq_len (static shape only)
+    return {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "cache": cache,
+    }

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch.
+
+Two implementations:
+
+* ``moe_block`` — production path. Sort-by-expert + scatter into a fixed
+  ``[E, C, d]`` buffer (GShard-style token dropping at capacity), grouped
+  einsum ``ecd,edf->ecf`` (shards cleanly: E over the EP/model axis, C over
+  data), gather back with combine weights. FLOPs == active-expert compute
+  x capacity factor.
+* ``moe_block_dense_oracle`` — all-experts-per-token reference used by unit
+  tests to validate routing/combine math (never for big shapes).
+
+Shared experts (DeepSeek-V3 / Kimi lineage) are plain SwiGLU applied to all
+tokens, added to the routed output.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, mlp_block, mlp_init
+
+Array = jax.Array
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    p = {
+        "router": dense_init(kr, d, e, jnp.float32),
+        "wg": (jax.random.normal(kg, (e, d, ff), jnp.float32) * scale).astype(dt),
+        "wu": (jax.random.normal(ku, (e, d, ff), jnp.float32) * scale).astype(dt),
+        "wd": (jax.random.normal(kd, (e, ff, d), jnp.float32) * scale).astype(dt),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(ks, cfg, d_ff=cfg.num_shared_experts * cfg.d_ff)
+    return p
+
+
+def router_probs(params, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """Top-k gates (renormalized) and expert ids. x: [T, d]."""
+    logits = (x.astype(jnp.float32) @ params["router"])  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)  # [T, k]
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return gates, idx
+
+
+def load_balance_loss(params, x: Array, cfg: ModelConfig) -> Array:
+    """Switch-style aux loss: E * sum(fraction_tokens * fraction_prob)."""
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    counts = jnp.sum(jax.nn.one_hot(idx, cfg.num_experts, dtype=jnp.float32),
+                     axis=(0, 1))
+    f = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    p = jnp.mean(probs, axis=0)
+    return cfg.num_experts * jnp.sum(f * p)
+
+
+def moe_block(params, x: Array, cfg: ModelConfig) -> Array:
+    """x: [B, S, d] -> [B, S, d]."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    cap = int(t * k / e * cfg.moe_capacity_factor)
+    cap = max(8, -(-cap // 8) * 8)  # round up to 8, floor 8
+
+    xf = x.reshape(t, d)
+    gates, idx = router_probs(params, xf, cfg)  # [T, k]
+
+    # Flatten (token, slot) assignments and sort by expert id.
+    e_flat = idx.reshape(t * k)
+    g_flat = gates.reshape(t * k)
+    t_flat = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(e_flat)  # stable
+    e_sort, g_sort, t_sort = e_flat[order], g_flat[order], t_flat[order]
+
+    # Position of each assignment within its expert's contiguous run.
+    counts = jnp.bincount(e_flat, length=e)              # [E]
+    starts = jnp.cumsum(counts) - counts                 # [E]
+    slot = jnp.arange(t * k) - starts[e_sort]            # [T*k]
+    keep = slot < cap
+    slot_c = jnp.where(keep, slot, 0)
+
+    # Scatter tokens into [E, C, d] buffers (dropped tokens zeroed).
+    vals = xf[t_sort] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((e, cap, d), x.dtype).at[e_sort, slot_c].add(
+        vals, mode="drop")
+
+    # Grouped SwiGLU over experts.
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wg"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, params["wu"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wd"])  # [E, C, d]
+
+    # Gather back with combine weights; dropped assignments contribute 0.
+    gathered = out_buf[e_sort, slot_c] * (g_sort * keep)[:, None].astype(x.dtype)
+    yf = jnp.zeros((t, d), x.dtype).at[t_sort].add(gathered, mode="drop")
+
+    if "shared" in params:
+        yf = yf + mlp_block(params["shared"], xf)
+    return yf.reshape(b, s, d)
+
+
+def moe_block_dense_oracle(params, x: Array, cfg: ModelConfig) -> Array:
+    """All-experts oracle (tiny shapes only): exact, no capacity drops."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    gates, idx = router_probs(params, xf, cfg)
+    # y_e = FFN_e(x) for every expert: [T, E, d]
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, params["wg"])) * \
+        jnp.einsum("td,edf->tef", xf, params["wu"])
+    y_all = jnp.einsum("tef,efd->ted", h, params["wd"])
+    combine = jnp.zeros((xf.shape[0], cfg.num_experts), jnp.float32)
+    combine = combine.at[jnp.arange(xf.shape[0])[:, None], idx].add(gates)
+    yf = jnp.einsum("te,ted->td", combine.astype(x.dtype), y_all)
+    if "shared" in params:
+        yf = yf + mlp_block(params["shared"], xf)
+    return yf.reshape(b, s, d)

@@ -1,0 +1,90 @@
+"""Small peer models for the paper-scale FL experiments.
+
+* ``cnn_classifier``  — two-block conv net + MLP head (MNIST-analogue,
+  paper §3.1 "CNN-based architecture").
+* ``mlp_classifier``  — classification head on frozen features
+  (20NG-on-DistilBERT analogue: the trainable part of the paper's text
+  model is exactly a head over frozen CLS features).
+
+Both are functional (init/apply) and vmap cleanly over a leading peer
+axis — the sim-backend federation stacks N copies of these params.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+
+def _dense(key, n_in, n_out):
+    w = jax.random.normal(key, (n_in, n_out), jnp.float32) / np.sqrt(n_in)
+    return {"w": w, "b": jnp.zeros((n_out,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# MLP head (text task)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, feature_dim: int, num_classes: int,
+             hidden: int = 128) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {"fc1": _dense(k1, feature_dim, hidden),
+            "fc2": _dense(k2, hidden, num_classes)}
+
+
+def mlp_apply(params: PyTree, x: Array) -> Array:
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Small CNN (vision task); input x: [B, 784] reshaped to 28x28x1
+# ---------------------------------------------------------------------------
+
+def cnn_init(key, feature_dim: int = 784, num_classes: int = 10) -> PyTree:
+    side = int(np.sqrt(feature_dim))
+    assert side * side == feature_dim, "vision features must be square"
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    c1, c2 = 8, 16
+    flat = (side // 4) * (side // 4) * c2
+    return {
+        "conv1": jax.random.normal(k1, (3, 3, 1, c1), jnp.float32) * 0.1,
+        "conv2": jax.random.normal(k2, (3, 3, c1, c2), jnp.float32) * 0.1,
+        "fc1": _dense(k3, flat, 64),
+        "fc2": _dense(k4, 64, num_classes),
+    }
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_apply(params: PyTree, x: Array) -> Array:
+    side = int(np.sqrt(x.shape[-1]))
+    img = x.reshape(-1, side, side, 1)
+    h = _pool(jax.nn.relu(_conv(img, params["conv1"])))
+    h = _pool(jax.nn.relu(_conv(h, params["conv2"])))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def build_peer_model(task: str, feature_dim: int, num_classes: int):
+    """Returns (init_fn(key) -> params, apply_fn(params, x) -> logits)."""
+    if task == "vision":
+        return (lambda key: cnn_init(key, feature_dim, num_classes),
+                cnn_apply)
+    return (lambda key: mlp_init(key, feature_dim, num_classes),
+            mlp_apply)

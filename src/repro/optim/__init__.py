@@ -1,0 +1,2 @@
+from repro.optim.sgdm import momentum_sgd_init, momentum_sgd_step
+from repro.optim.adamw import adamw_init, adamw_step

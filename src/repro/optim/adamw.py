@@ -1,0 +1,51 @@
+"""AdamW — used by the LM pretraining driver (``launch/train.py``).
+
+Functional, pytree-structured (no optax dependency in the offline
+container). State is (mu, nu, count); params may be bf16 with fp32
+moments.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_step(params: PyTree, state: AdamWState, grads: PyTree, lr: float,
+               b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+               weight_decay: float = 0.1) -> Tuple[PyTree, AdamWState]:
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    new_mu = jax.tree.map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+        state.mu, grads)
+    new_nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+
+    def upd(p, m, v):
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_p = jax.tree.map(upd, params, new_mu, new_nu)
+    return new_p, AdamWState(new_mu, new_nu, count)

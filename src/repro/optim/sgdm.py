@@ -1,0 +1,39 @@
+"""Damped momentum SGD (Reddi et al., 2020) — the paper's local optimizer.
+
+Update (the "damped" form used by FedOpt's ClientOpt and by MAR-FL):
+
+    m_t = mu * m_{t-1} + (1 - mu) * g_t
+    theta_t = theta_{t-1} - eta * m_t
+
+Momentum vectors are first-class federation state: MAR averages (theta, m)
+jointly (Alg. 1 line 10), so ``m`` lives in the same pytree structure as
+the params.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def momentum_sgd_init(params: PyTree, dtype=jnp.float32) -> PyTree:
+    """Zero momentum (fp32 default; bf16 supported for the 1T-scale
+    memory hillclimb — EXPERIMENTS.md §Perf B-ladder)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+def momentum_sgd_step(params: PyTree, momentum: PyTree, grads: PyTree,
+                      lr: float, mu: float = 0.9) -> Tuple[PyTree, PyTree]:
+    """Update in fp32, store momentum back in its own dtype."""
+    new_m = jax.tree.map(
+        lambda m, g: (mu * m.astype(jnp.float32)
+                      + (1.0 - mu) * g.astype(jnp.float32)).astype(m.dtype),
+        momentum, grads)
+    new_p = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32)
+                      - lr * m.astype(jnp.float32)).astype(p.dtype),
+        params, new_m)
+    return new_p, new_m

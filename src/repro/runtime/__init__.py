@@ -1,0 +1,2 @@
+from repro.runtime.sharding import (ShardPlan, make_shard_plan,
+                                    state_shardings, batch_shardings)

@@ -1,0 +1,517 @@
+"""Scan-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 95 layers reports 1/95th of the real FLOPs (verified
+in tests). Since the whole framework scans over depth (HLO-size sanity),
+we re-derive FLOPs / bytes / collective bytes from ``compiled.as_text()``
+with **while-loop trip-count multiplication**:
+
+* parse the module into computations and instructions;
+* ``while`` cost = trip x (body + condition), trip extracted from the
+  condition's comparison constant (scan emits ``iter < L``);
+* ``fusion`` FLOPs recurse into the fused computation, but bytes count
+  only the fusion's operands/outputs (internal values never hit HBM —
+  HloCostAnalysis' own convention);
+* ``dot`` FLOPs = 2 x prod(result) x prod(contracting dims), read off
+  the printed shapes; elementwise ops count 1 FLOP/element;
+* collective ops (all-gather / all-reduce / reduce-scatter / all-to-all
+  / collective-permute) accumulate operand bytes, multiplied by the
+  enclosing loops' trip counts.
+
+Everything is per-device: the module is the SPMD-partitioned program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "ragged-all-to-all", "collective-permute")
+
+_TYPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\](?:\{[^}]*\})?")
+
+# instruction prefix: `  [ROOT] %name = ` (type + opcode parsed procedurally
+# because tuple types contain nested parens and /*index=N*/ comments)
+_INSTR_PREFIX_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+# computation headers sit at column 0 and end with `{`; instructions are
+# indented. Params may contain nested tuple types -> balanced extraction.
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_shape_elems(dims) * _DTYPE_BYTES[dt]
+               for dt, dims in _TYPE_RE.findall(type_str))
+
+
+def _first_shape(type_str: str) -> Tuple[str, List[int]]:
+    m = _TYPE_RE.search(type_str)
+    if not m:
+        return "f32", []
+    dt, dims = m.group(1), m.group(2)
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    param_types: Dict[str, str]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0            # compute-carrying HBM traffic
+    layout_bytes: float = 0.0     # pure copy/convert/transpose traffic —
+    #                               CPU-backend bf16->f32 artifacts that a
+    #                               TPU build fuses away; reported separately
+    collective_bytes: float = 0.0
+    collective_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+
+    def add(self, other: "Cost", times: float = 1.0):
+        self.flops += times * other.flops
+        self.bytes += times * other.bytes
+        self.layout_bytes += times * other.layout_bytes
+        self.collective_bytes += times * other.collective_bytes
+        for k in _COLLECTIVES:
+            self.collective_by_op[k] += times * other.collective_by_op[k]
+            self.collective_counts[k] += times * other.collective_counts[k]
+
+
+def _split_top_level(s: str) -> List[str]:
+    """Split on commas outside any (), {}, [] nesting."""
+    out, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _balanced(s: str, start: int) -> str:
+    """Contents of the paren group opening at s[start] == '('."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return s[start + 1:i]
+    return s[start + 1:]
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if line[0] != " " and line.rstrip().endswith("{"):
+            mc = _COMP_NAME_RE.match(line)
+            if mc:
+                params = {}
+                body = _balanced(line, line.index("("))
+                for p in _split_top_level(body):
+                    if ":" in p:
+                        pname, ptype = p.split(":", 1)
+                        params[pname.strip().lstrip("%")] = ptype.strip()
+                cur = Computation(mc.group(1), [], params)
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        ins = _parse_instr(line)
+        if ins:
+            cur.instrs.append(ins)
+    return comps
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    m = _INSTR_PREFIX_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    if i >= len(line):
+        return None
+    if line[i] == "(":                       # tuple result type
+        inner = _balanced(line, i)
+        type_str = "(" + inner + ")"
+        i += len(inner) + 2
+    else:
+        m2 = re.match(r"\S+", line[i:])
+        if not m2:
+            return None
+        type_str = m2.group(0)
+        i += m2.end()
+    m3 = _OPCODE_RE.match(line[i:])
+    if not m3:
+        return None
+    opcode = m3.group(1)
+    operand_start = i + m3.end() - 1
+    operands = _operand_names(line, operand_start)
+    return Instr(name, type_str, opcode, operands, line)
+
+
+def _operand_names(line: str, start: int) -> List[str]:
+    depth, i, toks, cur = 0, start, [], []
+    while i < len(line):
+        ch = line[i]
+        if ch == "(":
+            depth += 1
+            if depth > 1:
+                cur.append(ch)
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                toks.append("".join(cur))
+                break
+            cur.append(ch)
+        elif ch == "," and depth == 1:
+            toks.append("".join(cur))
+            cur = []
+        else:
+            if depth >= 1:
+                cur.append(ch)
+        i += 1
+    out = []
+    for tok in toks:
+        tok = tok.strip()
+        m = re.search(r"%([\w.\-]+)\s*$", tok)
+        if m:
+            out.append(m.group(1))
+        elif tok and "[" not in tok:
+            out.append(tok.lstrip("%"))
+    return out
+
+
+_ATTR_COMP_RE = {
+    "body": re.compile(r"body=%?([\w.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w.\-]+)"),
+    "branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+    "to_apply": re.compile(r"to_apply=%?([\w.\-]+)"),
+}
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "iota"}
+
+
+class ModuleAnalysis:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self._cost_cache: Dict[str, Cost] = {}
+        self.entry = self._find_entry(text)
+        self.unknown_trip_whiles = 0
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        if m:
+            return m.group(1)
+        # fallback: the computation named like main
+        for name in self.comps:
+            if "main" in name:
+                return name
+        return next(iter(self.comps))
+
+    # ------------------------------------------------------------------
+    def cost(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+    def comp_cost(self, comp_name: str) -> Cost:
+        if comp_name in self._cost_cache:
+            return self._cost_cache[comp_name]
+        comp = self.comps.get(comp_name)
+        total = Cost()
+        self._cost_cache[comp_name] = total  # guards recursion
+        if comp is None:
+            return total
+        types = dict(comp.param_types)
+        for ins in comp.instrs:
+            types[ins.name] = ins.type_str
+        for ins in comp.instrs:
+            total.add(self._instr_cost(ins, types, comp))
+        return total
+
+    # ------------------------------------------------------------------
+    def _instr_cost(self, ins: Instr, types: Dict[str, str],
+                    comp: Computation) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        out_bytes = _type_bytes(ins.type_str)
+        opnd_bytes = sum(_type_bytes(types.get(o, "")) for o in ins.operands)
+
+        if op == "while":
+            body = _ATTR_COMP_RE["body"].search(ins.line)
+            cond = _ATTR_COMP_RE["condition"].search(ins.line)
+            # prefer XLA's own analysis: backend_config known_trip_count
+            mt = re.search(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)',
+                           ins.line)
+            if mt:
+                trip = int(mt.group(1))
+            elif cond:
+                trip = self._trip_count(cond.group(1))
+            else:
+                trip = 1
+            if body:
+                c.add(self.comp_cost(body.group(1)), trip)
+            if cond:
+                c.add(self.comp_cost(cond.group(1)), trip)
+            # loop carries are buffer-aliased in place — no traffic for
+            # the while op itself; body slice/DUS reads are counted above
+            return c
+        if op == "conditional":
+            mb = _ATTR_COMP_RE["branches"].search(ins.line)
+            if mb:
+                branch_costs = [self.comp_cost(b.strip().lstrip("%"))
+                                for b in mb.group(1).split(",")]
+                worst = max(branch_costs, key=lambda x: x.flops,
+                            default=Cost())
+                c.add(worst)
+            c.bytes += out_bytes + opnd_bytes
+            return c
+        if op in ("call", "fusion", "async-start"):
+            mcalls = _ATTR_COMP_RE["calls"].search(ins.line)
+            if mcalls:
+                inner = self.comp_cost(mcalls.group(1))
+                # fused internals never touch HBM: take flops+collectives
+                c.flops += inner.flops
+                c.collective_bytes += inner.collective_bytes
+                for k in _COLLECTIVES:
+                    c.collective_by_op[k] += inner.collective_by_op[k]
+                    c.collective_counts[k] += inner.collective_counts[k]
+                fb = self._fusion_bytes(mcalls.group(1), ins, out_bytes,
+                                        types)
+                if self._layout_only(mcalls.group(1)):
+                    c.layout_bytes += fb
+                else:
+                    c.bytes += fb
+            else:
+                c.bytes += out_bytes + opnd_bytes
+            return c
+
+        base = op
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base in _COLLECTIVES:
+            if not op.endswith("-done"):
+                c.collective_bytes += opnd_bytes
+                c.collective_by_op[base] += opnd_bytes
+                c.collective_counts[base] += 1
+                c.bytes += out_bytes + opnd_bytes
+            return c
+
+        if op in _SKIP_BYTES_OPS:
+            return c
+        # slice-like ops read/write only the moved window, not the buffer
+        if op in ("slice", "dynamic-slice"):
+            c.bytes += 2.0 * out_bytes
+            return c
+        if op == "dynamic-update-slice":
+            upd = _type_bytes(types.get(ins.operands[1], "")) \
+                if len(ins.operands) > 1 else out_bytes
+            c.bytes += 2.0 * upd
+            return c
+        if op == "gather":
+            idx = _type_bytes(types.get(ins.operands[1], "")) \
+                if len(ins.operands) > 1 else 0
+            c.bytes += 2.0 * out_bytes + idx
+            return c
+        if op == "scatter":
+            upd = _type_bytes(types.get(ins.operands[-1], "")) \
+                if ins.operands else out_bytes
+            c.bytes += 2.0 * upd
+            return c
+        if op in ("broadcast", "reshape", "copy", "transpose", "convert",
+                  "reverse"):
+            c.layout_bytes += 2.0 * out_bytes
+            return c
+        if op in ("concatenate", "pad"):
+            c.bytes += 2.0 * out_bytes
+            return c
+        c.bytes += out_bytes + opnd_bytes
+
+        if op == "dot":
+            c.flops += self._dot_flops(ins, types)
+        elif op == "convolution":
+            c.flops += self._conv_flops(ins, types)
+        elif op in ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                    "logistic", "sine", "cosine", "erf"):
+            _, dims = _first_shape(ins.type_str)
+            c.flops += 8.0 * _prod(dims)       # transcendental weight
+        elif op in ("reduce", "reduce-window"):
+            c.flops += float(opnd_bytes) / 4.0  # ~1 op per input element
+        else:
+            _, dims = _first_shape(ins.type_str)
+            c.flops += float(_prod(dims))
+        return c
+
+    # ops whose fusion is pure re-typing/re-layout of VALUES ALREADY READ
+    # elsewhere. Deliberately excludes slice/dynamic-slice (per-layer
+    # weight reads from stacked buffers are real HBM traffic) and
+    # dynamic-update-slice (activation/grad saves are real writes).
+    _LAYOUT_OPS = frozenset({
+        "copy", "convert", "bitcast", "transpose", "reshape", "broadcast",
+        "parameter", "constant", "tuple", "get-tuple-element"})
+
+    def _layout_only(self, comp_name: str) -> bool:
+        """True when the fused computation only moves/re-types data —
+        CPU-backend bf16<->f32 staging a TPU build would fuse away."""
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return False
+        return all(i.opcode in self._LAYOUT_OPS for i in comp.instrs)
+
+    # ------------------------------------------------------------------
+    def _fusion_bytes(self, comp_name: str, ins: Instr, out_bytes: float,
+                      types: Dict[str, str]) -> float:
+        """HBM bytes of a fusion: output written + parameters read.
+
+        Refinements over naive operand+output counting:
+        * a parameter only consumed via slice/dynamic-slice/gather reads
+          just the sliced window (scanned weight stacks);
+        * a parameter flowing into dynamic-update-slice operand 0 is an
+          in-place aliased accumulator: the full buffer is neither read
+          nor rewritten — only the update window is written (gradient
+          accumulation into stacked [L, ...] buffers).
+        """
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return out_bytes + float(sum(_type_bytes(types.get(o, ""))
+                                         for o in ins.operands))
+        inner_types = dict(comp.param_types)
+        for inner in comp.instrs:
+            inner_types[inner.name] = inner.type_str
+
+        aliased: Dict[str, float] = {}      # param -> update bytes
+        for inner in comp.instrs:
+            if inner.opcode == "dynamic-update-slice" and inner.operands:
+                dst = inner.operands[0]
+                if dst in comp.param_types:
+                    upd = (_type_bytes(inner_types.get(inner.operands[1], ""))
+                           if len(inner.operands) > 1 else 0)
+                    aliased[dst] = aliased.get(dst, 0.0) + float(upd)
+
+        reads: Dict[str, float] = {}
+        for inner in comp.instrs:
+            for o in inner.operands:
+                if o not in comp.param_types or o in aliased:
+                    continue
+                full = float(_type_bytes(comp.param_types[o]))
+                if inner.opcode in ("slice", "dynamic-slice", "gather"):
+                    contrib = float(_type_bytes(inner.type_str))
+                else:
+                    contrib = full
+                reads[o] = max(reads.get(o, 0.0), contrib)
+
+        total_out = out_bytes
+        for p, upd in aliased.items():
+            total_out -= float(_type_bytes(comp.param_types[p]))
+            total_out += upd
+        return max(total_out, 0.0) + float(sum(reads.values()))
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, ins: Instr, types: Dict[str, str]) -> float:
+        _, out_dims = _first_shape(ins.type_str)
+        mlhs = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+        if not mlhs or not ins.operands:
+            return 2.0 * _prod(out_dims)
+        _, lhs_dims = _first_shape(types.get(ins.operands[0], ""))
+        k = 1
+        for d in mlhs.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                k *= lhs_dims[int(d)]
+        return 2.0 * _prod(out_dims) * k
+
+    def _conv_flops(self, ins: Instr, types: Dict[str, str]) -> float:
+        _, out_dims = _first_shape(ins.type_str)
+        if len(ins.operands) < 2:
+            return 2.0 * _prod(out_dims)
+        _, ker = _first_shape(types.get(ins.operands[1], ""))
+        # kernel = spatial... x in_features x out_features (dim order
+        # varies; product/out_features is the per-output work)
+        work = _prod(ker) / max(out_dims[-1] if out_dims else 1, 1)
+        return 2.0 * _prod(out_dims) * max(work, 1.0)
+
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            self.unknown_trip_whiles += 1
+            return 1
+        consts = []
+        for ins in comp.instrs:
+            m = re.search(r"constant\(([0-9]+)\)", ins.line)
+            if m:
+                consts.append(int(m.group(1)))
+        if not consts:
+            self.unknown_trip_whiles += 1
+            return 1
+        return max(consts)
+
+
+def _prod(dims: List[int]) -> float:
+    n = 1.0
+    for d in dims:
+        n *= d
+    return n
+
+
+def analyze_text(text: str) -> Dict[str, float]:
+    """Scan-aware per-device cost summary of an optimized HLO module."""
+    mod = ModuleAnalysis(text)
+    c = mod.cost()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "layout_bytes": c.layout_bytes,
+        "collective_bytes": c.collective_bytes,
+        "collective_by_op": dict(c.collective_by_op),
+        "collective_counts": dict(c.collective_counts),
+        "unknown_trip_whiles": mod.unknown_trip_whiles,
+    }

@@ -1,0 +1,60 @@
+"""Training metrics: JSONL stream + rolling throughput summaries.
+
+Append-only JSONL (one record per log call) so concurrent tails,
+crashes, and elastic restarts never corrupt history — the restart
+appends with a new ``run_id`` and the reader reconciles by step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import uuid
+from collections import deque
+from typing import Any, Dict, Optional
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None, window: int = 20):
+        self.path = path
+        self.run_id = uuid.uuid4().hex[:8]
+        self._t0 = time.time()
+        self._durations = deque(maxlen=window)
+        self._last: Optional[float] = None
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def log(self, step: int, tokens: Optional[int] = None,
+            **metrics: Any) -> Dict[str, Any]:
+        now = time.time()
+        if self._last is not None:
+            self._durations.append(now - self._last)
+        self._last = now
+        rec: Dict[str, Any] = {
+            "run_id": self.run_id, "step": int(step),
+            "wall_s": round(now - self._t0, 3),
+        }
+        if self._durations:
+            avg = sum(self._durations) / len(self._durations)
+            rec["step_ms"] = round(avg * 1e3, 1)
+            if tokens:
+                rec["tokens_per_s"] = round(tokens / max(avg, 1e-9), 1)
+        for k, v in metrics.items():
+            rec[k] = float(v) if hasattr(v, "item") or \
+                isinstance(v, (int, float)) else v
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+        return rec
+
+
+def read_metrics(path: str):
+    """Reconciled history: the newest record per step wins (restarts)."""
+    by_step: Dict[int, Dict[str, Any]] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rec = json.loads(line)
+                by_step[rec["step"]] = rec
+    return [by_step[s] for s in sorted(by_step)]

@@ -1,0 +1,253 @@
+"""Divisibility-aware sharding rules for the production mesh.
+
+``make_shard_plan`` maps a (mesh, n_peers) pair to a :class:`ShardPlan`;
+``state_shardings`` walks any peer-stacked pytree and assigns each leaf:
+
+  dim 0              -> the peer axes (MAR replicas; "pod" on the
+                        multi-pod mesh, "data" on the single-pod mesh)
+  largest other dim  -> TP axis ("model"), if divisible
+  next largest dim   -> FSDP axes (remaining DP axes inside a peer), if
+                        divisible
+
+Greedy-with-fallback: any dim that fails divisibility is replicated on
+that axis instead — no config ever fails to shard, it just shards less
+(logged via ``plan.report``). This one rule set covers all 10 assigned
+architectures: MoE expert stacks [L, E, d, f] get E->model + d->fsdp
+(384 % 16 == 0), dense stacks [L, d, ff] get ff->model + d->fsdp, vocab
+embeddings [V, d] get V->model, SSM conv/gate vectors stay replicated.
+
+Batch arrays shard their leading (global-batch or peer) dim over *all*
+DP axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    mesh: Mesh
+    peer_axes: Tuple[str, ...]     # mesh axes enumerating MAR peers
+    fsdp_axes: Tuple[str, ...]     # within-peer param-shard axes
+    tp_axes: Tuple[str, ...]       # tensor-parallel axes
+    n_peers: int
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return self.peer_axes + self.fsdp_axes
+
+    def axis_size(self, axes: Sequence[str]) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+
+
+def make_shard_plan(mesh: Mesh, peer_axes: Optional[Sequence[str]] = None
+                    ) -> ShardPlan:
+    """Default plans for the two production meshes (DESIGN.md §5):
+
+    * (data=16, model=16)           -> peers over "data" (16 peers, MAR
+                                       grid 4x4), TP over "model", no FSDP
+    * (pod=2, data=16, model=16)    -> peers over "pod" (2 peers), FSDP
+                                       over "data", TP over "model" —
+                                       cross-pod traffic only in the MAR
+                                       round over the pod axis
+    """
+    names = mesh.axis_names
+    if peer_axes is None:
+        peer_axes = ("pod",) if "pod" in names else ("data",)
+    peer_axes = tuple(peer_axes)
+    tp_axes = ("model",) if ("model" in names
+                             and "model" not in peer_axes) else ()
+    fsdp_axes = tuple(a for a in names
+                      if a not in peer_axes and a not in tp_axes)
+    n_peers = int(np.prod([mesh.shape[a] for a in peer_axes]))
+    return ShardPlan(mesh, peer_axes, fsdp_axes, tp_axes, n_peers)
+
+
+# ---------------------------------------------------------------------------
+# leaf rules — name-aware Megatron-style TP with divisibility fallbacks
+# ---------------------------------------------------------------------------
+
+# column-parallel (shard the OUTPUT dim, -1): activations stay sharded,
+# no collective until the paired row-parallel matmul
+_COL_PARALLEL = {"wg", "wu", "up_proj", "w_in"}
+# row-parallel (shard the INPUT dim, -2): consumes col-parallel output,
+# emits one all-reduce
+_ROW_PARALLEL = {"wd", "out_proj"}
+# attention projections: shard only on whole-head boundaries
+_ATTN_COL = {"wq"}          # out dim = num_heads * head_dim
+_ATTN_KV = {"wk", "wv"}     # out dim = num_kv_heads * head_dim
+_ATTN_ROW = {"wo"}          # in  dim = num_heads * head_dim
+_NEVER_TP = {"router", "a_log", "dt_bias", "d_skip", "bias", "conv_w",
+             "r_rec", "norm", "norm1", "norm2", "final_norm",
+             "frontend_norm"}
+
+
+def _assign(spec, i, axes):
+    spec[i] = axes if len(axes) > 1 else axes[0]
+
+
+def _leaf_spec(name: str, shape: Tuple[int, ...], plan: ShardPlan,
+               peer_stacked: bool, head_dim: int = 0,
+               num_heads: int = 0, num_kv_heads: int = 0) -> P:
+    nd = len(shape)
+    spec: List[Any] = [None] * nd
+    start = 0
+    if peer_stacked and nd >= 1 and shape[0] == plan.n_peers \
+            and plan.n_peers > 1:
+        _assign(spec, 0, plan.peer_axes)
+        start = 1
+
+    tp = plan.axis_size(plan.tp_axes)
+    tp_dim: Optional[int] = None
+
+    def head_ok(heads: int) -> bool:
+        return heads > 0 and heads % tp == 0
+
+    if tp > 1 and nd - start >= 1 and name not in _NEVER_TP:
+        cand: Optional[int] = None
+        if name in _COL_PARALLEL or name in _ATTN_COL or name in _ATTN_KV:
+            # column-parallel; for attention, whole-head alignment is
+            # preferred but plain divisibility still shards (GSPMD
+            # reshards the head reshape — costed in the roofline)
+            cand = nd - 1
+        elif (name in _ROW_PARALLEL or name in _ATTN_ROW) \
+                and nd - start >= 2:
+            cand = nd - 2
+        elif name == "tok" and nd - start >= 2:
+            cand = nd - 2                   # vocab-parallel embedding
+        elif name == "unembed":
+            cand = nd - 1                   # vocab-parallel logits
+        else:  # fallback: largest dim, preferring later (output) dims
+            cand = max(range(start, nd), key=lambda i: (shape[i], i)) \
+                if nd > start else None
+        # MoE expert stacks [*, E, d, ff]: prefer expert-parallel on E
+        if name in ("wg", "wu", "wd") and nd - start >= 3 \
+                and shape[nd - 3] % tp == 0:
+            cand = nd - 3
+        if cand is not None and cand >= start \
+                and shape[cand] % tp == 0 and shape[cand] >= tp:
+            _assign(spec, cand, plan.tp_axes)
+            tp_dim = cand
+
+    fsdp = plan.axis_size(plan.fsdp_axes)
+    if fsdp > 1:
+        order = sorted((i for i in range(start, nd) if i != tp_dim),
+                       key=lambda i: -shape[i])
+        for i in order:
+            if shape[i] % fsdp == 0 and shape[i] >= fsdp:
+                _assign(spec, i, plan.fsdp_axes)
+                break
+    return P(*spec)
+
+
+def state_shardings(tree: PyTree, plan: ShardPlan,
+                    peer_stacked: bool = True, head_dim: int = 0,
+                    num_heads: int = 0, num_kv_heads: int = 0) -> PyTree:
+    """NamedShardings for a (possibly peer-stacked) state pytree. Leaf
+    names (last dict key on the path) select Megatron-style TP rules."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, x in flat:
+        name = ""
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        out.append(NamedSharding(plan.mesh, _leaf_spec(
+            name, tuple(x.shape), plan, peer_stacked, head_dim,
+            num_heads, num_kv_heads)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(tree: PyTree, plan: ShardPlan,
+                    peer_leading: bool = True) -> PyTree:
+    """Token/batch arrays: leading dim(s) over DP axes.
+
+    Peer-led train batches [P, B, n_micro, mb, ...]: dim0 -> peer axes,
+    mb dim -> fsdp axes. Flat serve batches [b, ...]: dim0 -> all DP
+    axes (fallback: fewer axes when b isn't divisible).
+    """
+    def leaf(x):
+        shape = tuple(x.shape)
+        spec: List[Any] = [None] * len(shape)
+        if peer_leading and shape[0] == plan.n_peers and plan.n_peers > 1:
+            spec[0] = plan.peer_axes if len(plan.peer_axes) > 1 \
+                else plan.peer_axes[0]
+            if plan.fsdp_axes:
+                size = plan.axis_size(plan.fsdp_axes)
+                # shard the microbatch dim (index -2 for [..., mb, seq])
+                for i in range(len(shape) - 2, 0, -1):
+                    if shape[i] % size == 0 and shape[i] >= size:
+                        spec[i] = plan.fsdp_axes if len(plan.fsdp_axes) > 1 \
+                            else plan.fsdp_axes[0]
+                        break
+        else:
+            # flat batch: greedily shard dim0 over as many DP axes as divide
+            axes = []
+            for a in plan.dp_axes:
+                if shape[0] % int(np.prod(
+                        [plan.mesh.shape[x] for x in axes + [a]])) == 0:
+                    axes.append(a)
+            if axes:
+                spec[0] = tuple(axes) if len(axes) > 1 else axes[0]
+        return NamedSharding(plan.mesh, P(*spec))
+    return jax.tree.map(leaf, tree)
+
+
+def cache_shardings(cache: PyTree, plan: ShardPlan, batch_size: int
+                    ) -> PyTree:
+    """Decode-cache rules: the batch dim shards over DP axes; the largest
+    remaining dim (the 32k seq axis of KV caches, the head/state dims of
+    SSM caches) shards over TP — seq-over-model is the split-K /
+    flash-decode layout, whose softmax reductions are tiny collectives.
+    """
+    def leaf(x):
+        shape = tuple(x.shape)
+        spec: List[Any] = [None] * len(shape)
+        # locate the batch dim (first exact size match)
+        bdim = None
+        for i, s in enumerate(shape):
+            if s == batch_size:
+                bdim = i
+                break
+        if bdim is not None:
+            axes = []
+            for a in plan.dp_axes:
+                if batch_size % int(np.prod(
+                        [plan.mesh.shape[x] for x in axes + [a]])) == 0:
+                    axes.append(a)
+            if axes:
+                spec[bdim] = tuple(axes) if len(axes) > 1 else axes[0]
+        if plan.tp_axes:
+            size = plan.axis_size(plan.tp_axes)
+            order = sorted((i for i in range(len(shape)) if i != bdim),
+                           key=lambda i: -shape[i])
+            for i in order:
+                if shape[i] % size == 0 and shape[i] >= size:
+                    spec[i] = plan.tp_axes if len(plan.tp_axes) > 1 \
+                        else plan.tp_axes[0]
+                    break
+        return NamedSharding(plan.mesh, P(*spec))
+    return jax.tree.map(leaf, cache)
+
+
+def report(tree: PyTree, plan: ShardPlan, peer_stacked: bool = True,
+           **head_kw) -> Dict[str, str]:
+    """Human-readable leaf -> spec table (DESIGN/EXPERIMENTS appendix)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        name = key.split("/")[-1]
+        out[key] = f"{tuple(leaf.shape)} -> " \
+                   f"{_leaf_spec(name, tuple(leaf.shape), plan, peer_stacked, **head_kw)}"
+    return out

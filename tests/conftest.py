@@ -1,0 +1,19 @@
+"""Shared fixtures. NOTE: no XLA device-count forcing here — smoke tests
+run on the single real CPU device; mesh-dependent tests spawn
+subprocesses that set XLA_FLAGS before importing jax."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running (dry-run scale)")

@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests: reduced configs, one forward + one FL
+train step on CPU, asserting shapes and finiteness (brief requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, shape_applicable
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.core.fl_device import (init_fl_state, make_fl_train_step,
+                                  make_serve_step)
+from repro.core.moshpit import plan_grid
+from repro.models.model import Model
+from repro.models.transformer import PREFIX_LEN
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng, batch=B, seq=S):
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
+                       jnp.int32)
+    out = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.frontend != "none":
+        p = PREFIX_LEN[cfg.frontend]
+        out["prefix_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, p, cfg.d_model)), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    rng = np.random.default_rng(0)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+    logits, aux, _ = model.forward(params, batch["tokens"],
+                                   prefix_embeds=batch.get("prefix_embeds"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_fl_train_step(arch):
+    """One full MAR-FL iteration (2 peers, grid (2,)): loss finite,
+    post-aggregation peers agree."""
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    rng = np.random.default_rng(1)
+    n_peers = 2
+    grid = plan_grid(n_peers)
+    state = init_fl_state(model, n_peers, jax.random.PRNGKey(1))
+    raw = _batch(cfg, rng, batch=n_peers * 2)
+    batch = {k: v.reshape((n_peers, 1, 1, 2) + v.shape[1:])
+             for k, v in raw.items()}
+    step = jax.jit(make_fl_train_step(model, grid, lr=0.01))
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    p = jax.tree.leaves(state["params"])[0]
+    assert bool(jnp.all(jnp.isfinite(p)))
+    spread = float(jnp.max(jnp.abs(
+        p.astype(jnp.float32) - jnp.mean(p.astype(jnp.float32), 0,
+                                         keepdims=True))))
+    assert spread < 1e-2, spread
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    cache = model.init_cache(B, max_len=16)
+    serve = jax.jit(make_serve_step(model))
+    tok = jnp.zeros((B,), jnp.int32)
+    for _ in range(3):
+        tok, cache = serve(params, cache, tok)
+    assert tok.shape == (B,)
+    assert int(cache["pos"][0]) == 3
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "xlstm-350m",
+                                  "zamba2-2.7b", "moonshot-v1-16b-a3b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forcing parity: step-by-step decode logits == one-shot
+    forward logits on the same token prefix."""
+    cfg = get_smoke_config(arch)
+    if cfg.attn_impl == "flash":
+        cfg = __import__("dataclasses").replace(cfg, attn_impl="xla")
+    model = Model(cfg)
+    rng = np.random.default_rng(3)
+    params = model.init(jax.random.PRNGKey(3))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+    logits, _, _ = model.forward(params, toks)
+    cache = model.init_cache(1, max_len=8)
+    outs = []
+    for i in range(8):
+        lg, cache = model.decode_step(params, cache, toks[:, i])
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(logits, np.float32),
+                               atol=8e-2, rtol=8e-2)
+
+
+def test_param_counts_match_published_scale():
+    """Full configs land near their names' parameter scale.
+
+    Counts follow the ASSIGNED table dims with this framework's uniform
+    SwiGLU FFN convention, which inflates archs whose published variant
+    uses a 2-matrix MLP (starcoder2 +~40%, musicgen ~1.8B vs 1.5B) —
+    and moonshot's assigned 48L exceeds Moonlight's published 27L
+    (~29B total). Documented in DESIGN.md §7.
+    """
+    expect = {
+        "granite-8b": (7e9, 9.5e9),
+        "glm4-9b": (8e9, 10.5e9),
+        "deepseek-67b": (60e9, 72e9),
+        "starcoder2-3b": (2.5e9, 5e9),
+        "pixtral-12b": (11e9, 14e9),
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "moonshot-v1-16b-a3b": (25e9, 32e9),
+        "xlstm-350m": (0.2e9, 0.6e9),
+        "zamba2-2.7b": (2.0e9, 3.3e9),
+        "musicgen-medium": (1.2e9, 2.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:,}"
+
+
+def test_moe_active_params():
+    cfg = get_config("kimi-k2-1t-a32b")
+    active = cfg.active_param_count()
+    assert active < 0.1 * cfg.param_count()
+    assert 2.5e10 < active < 4.5e10  # "A32B"
+
+
+def test_shape_applicability():
+    skipped = [(a, s) for a, s, ok in
+               __import__("repro.configs.registry",
+                          fromlist=["all_cells"]).all_cells(True) if not ok]
+    assert len(skipped) == 8  # long_500k on the 8 quadratic archs
+    assert all(s == "long_500k" for _, s in skipped)

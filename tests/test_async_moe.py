@@ -1,0 +1,87 @@
+"""Async (staleness-1) aggregation + MoE dispatch consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.federation import Federation, FederationConfig
+
+
+def test_async_aggregation_converges():
+    """Staleness-1 delayed averaging still trains (slower than sync —
+    the overlap/utility trade-off is the point, EXPERIMENTS.md)."""
+    accs = {}
+    for mode in (False, True):
+        cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                               local_batches=4, async_aggregation=mode,
+                               seed=3)
+        fed = Federation(cfg)
+        state = fed.init_state()
+        for _ in range(25):
+            state = fed.step(state)
+        accs[mode] = fed.evaluate(state)
+    assert accs[True] > 0.3          # converges
+    assert accs[False] >= accs[True]  # sync is the quality ceiling
+
+
+def test_async_comm_bytes_match_sync():
+    cfgs = [FederationConfig(n_peers=8, technique="mar", task="text",
+                             async_aggregation=m, seed=1) for m in
+            (False, True)]
+    comms = []
+    for cfg in cfgs:
+        fed = Federation(cfg)
+        s = fed.init_state()
+        for _ in range(3):
+            s = fed.step(s)
+        comms.append(fed.comm_bytes)
+    assert comms[0] == comms[1]      # same bytes, different schedule
+
+
+def test_async_dp_rejected():
+    cfg = FederationConfig(n_peers=8, use_dp=True, async_aggregation=True,
+                           task="text")
+    fed = Federation(cfg)
+    state = fed.init_state()
+    with pytest.raises(AssertionError):
+        fed.step(state)
+
+
+# ---------------------------------------------------------------------------
+# MoE: capacity-dispatch block vs all-experts oracle
+# ---------------------------------------------------------------------------
+
+def test_moe_block_matches_dense_oracle():
+    from repro.configs.registry import get_smoke_config
+    from repro.models.moe import (moe_block, moe_block_dense_oracle,
+                                  moe_init)
+    cfg = get_smoke_config("moonshot-v1-16b-a3b")
+    # generous capacity so no token drops -> exact match expected
+    cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, 16, cfg.d_model)), jnp.float32).astype(jnp.dtype(cfg.dtype))
+    got = moe_block(params, x, cfg)
+    want = moe_block_dense_oracle(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity factor 1.0 and balanced-ish routing, the dispatch
+    output stays close to the oracle (drops only at the margin)."""
+    from repro.configs.registry import get_smoke_config
+    from repro.models.moe import moe_block, moe_block_dense_oracle, moe_init
+    cfg = get_smoke_config("kimi-k2-1t-a32b")
+    params = moe_init(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(np.random.default_rng(1).normal(
+        size=(2, 32, cfg.d_model)), jnp.float32).astype(jnp.dtype(cfg.dtype))
+    got = moe_block(params, x, cfg)
+    want = moe_block_dense_oracle(params, x, cfg)
+    # relative Frobenius error from capacity drops stays moderate
+    err = float(jnp.linalg.norm((got - want).astype(jnp.float32))
+                / jnp.linalg.norm(want.astype(jnp.float32)))
+    assert err < 0.5, err

@@ -1,0 +1,117 @@
+"""Checkpointer (atomic, keep-k, elastic) and fault-tolerance policies."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.moshpit import GridPlan, plan_grid
+from repro.runtime.fault import (HealthTracker, StragglerPolicy,
+                                 elastic_replan, failure_impact)
+
+
+def _tree(n_peers=4, seed=0):
+    r = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(r.normal(size=(n_peers, 8, 4)),
+                                    jnp.bfloat16),
+                   "b": jnp.asarray(r.normal(size=(n_peers, 4)),
+                                    jnp.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(5, t, metadata={"n_peers": 4, "step": 5})
+    got, meta = ck.restore(like=t)
+    assert meta["step"] == 5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype  # bf16 preserved through npz
+
+
+def test_keep_last_k(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree())
+    assert ck.steps() == [3, 4]
+
+
+def test_restore_without_like(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(), metadata={"n_peers": 4})
+    got, _ = ck.restore()
+    assert got["params"]["w"].shape == (4, 8, 4)
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(9, _tree(), blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 9
+
+
+def test_elastic_shrink_and_grow(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree(n_peers=4)
+    ck.save(3, t, metadata={"n_peers": 4, "step": 3})
+    small, _ = ck.restore_elastic(2)
+    assert small["params"]["w"].shape[0] == 2
+    big, _ = ck.restore_elastic(6)
+    assert big["params"]["w"].shape[0] == 6
+    # grown peers replicate existing ones cyclically
+    np.testing.assert_array_equal(
+        np.asarray(big["params"]["w"][4], np.float32),
+        np.asarray(t["params"]["w"][0], np.float32))
+
+
+def test_atomic_no_partial_dirs(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    names = os.listdir(tmp_path)
+    assert all(not n.startswith(".tmp") for n in names)
+
+
+# ---------------------------------------------------------------------------
+# fault policies
+# ---------------------------------------------------------------------------
+
+def test_health_tracker_timeout():
+    h = HealthTracker(4, timeout_s=10.0)
+    now = time.monotonic()
+    h.heartbeat(0, now=now)
+    h.heartbeat(1, now=now - 100)  # stale
+    h.peers[1].last_heartbeat = now - 100
+    dead = h.sweep(now=now)
+    assert 1 in dead
+    mask = h.alive_mask()
+    assert mask[0] == 1.0 and mask[1] == 0.0
+
+
+def test_straggler_policy():
+    sp = StragglerPolicy(k_std=2.0)
+    d = np.array([1.0, 1.1, 0.9, 1.0, 9.0], np.float32)
+    mask = sp.mask(d)
+    assert mask[-1] == 0.0 and mask[:4].all()
+
+
+def test_elastic_replan_keeps_group_size():
+    old = GridPlan(27, (3, 3, 3))
+    new = elastic_replan(old, 81)
+    assert new.dims == (3, 3, 3, 3)
+    other = elastic_replan(old, 100)
+    assert other.capacity >= 100
+
+
+def test_failure_impact_single_group():
+    """Paper claim: one dropout touches exactly one group per round."""
+    p = GridPlan(125, (5, 5, 5))
+    impact = failure_impact(p, [7])
+    for g in range(3):
+        assert impact[f"round_{g}_groups_touched"] == pytest.approx(1 / 25)

@@ -1,0 +1,50 @@
+"""Cluster bootstrap env parsing (multi-host glue)."""
+import os
+
+import pytest
+
+from repro.launch.cluster import (ClusterInfo, _first_host,
+                                  assert_mesh_feasible, detect_topology,
+                                  initialize_cluster)
+
+
+def test_single_host_default(monkeypatch):
+    for k in ("REPRO_NUM_PROCESSES", "SLURM_NTASKS"):
+        monkeypatch.delenv(k, raising=False)
+    info = detect_topology()
+    assert info.num_processes == 1 and info.process_id == 0
+    assert initialize_cluster().initialized is False  # no-op
+
+
+def test_explicit_env(monkeypatch):
+    monkeypatch.setenv("REPRO_NUM_PROCESSES", "128")
+    monkeypatch.setenv("REPRO_PROCESS_ID", "17")
+    monkeypatch.setenv("REPRO_COORDINATOR", "h0:8476")
+    info = detect_topology()
+    assert info.num_processes == 128
+    assert info.process_id == 17
+    assert info.coordinator == "h0:8476"
+    assert not info.is_coordinator
+
+
+def test_slurm_env(monkeypatch):
+    monkeypatch.delenv("REPRO_NUM_PROCESSES", raising=False)
+    monkeypatch.setenv("SLURM_NTASKS", "64")
+    monkeypatch.setenv("SLURM_PROCID", "0")
+    monkeypatch.setenv("SLURM_STEP_NODELIST", "tpu[003-066]")
+    info = detect_topology()
+    assert info.num_processes == 64
+    assert info.coordinator == "tpu003:8476"
+    assert info.is_coordinator
+
+
+def test_first_host_forms():
+    assert _first_host("node[003-008]") == "node003"
+    assert _first_host("node7") == "node7"
+    assert _first_host("a001,a002") == "a001"
+
+
+def test_mesh_feasibility_guard():
+    assert_mesh_feasible(128, 4, (2, 16, 16))        # 512 == 512
+    with pytest.raises(RuntimeError):
+        assert_mesh_feasible(64, 4, (2, 16, 16))     # 256 < 512

@@ -1,0 +1,107 @@
+"""Data partitioning, synthetic tasks, and the comm-cost models."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+from repro.core.moshpit import plan_grid
+from repro.data.partition import (dirichlet_partition, iid_partition,
+                                  partition_stats)
+from repro.data.synthetic import classification_task, lm_batch
+
+
+# ---------------------------------------------------------------------------
+# partitioning (the paper's LDA alpha=1.0 non-iid splits)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 40), st.floats(0.1, 10.0), st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_dirichlet_partition_covers_exactly_once(n_peers, alpha, seed):
+    labels = np.random.default_rng(seed).integers(0, 10, size=400)
+    shards = dirichlet_partition(labels, n_peers, alpha, seed=seed)
+    allidx = np.sort(np.concatenate(shards))
+    assert np.array_equal(allidx, np.arange(400))
+    assert all(len(s) >= 2 for s in shards)
+
+
+def test_dirichlet_more_skewed_at_low_alpha():
+    labels = np.random.default_rng(0).integers(0, 10, size=4000)
+    tv_low = partition_stats(
+        dirichlet_partition(labels, 20, alpha=0.1, seed=1), labels)["mean_tv"]
+    tv_high = partition_stats(
+        dirichlet_partition(labels, 20, alpha=100.0, seed=1),
+        labels)["mean_tv"]
+    assert tv_low > tv_high
+
+
+def test_iid_partition():
+    shards = iid_partition(100, 7)
+    assert np.array_equal(np.sort(np.concatenate(shards)), np.arange(100))
+
+
+def test_classification_tasks_learnable_stats():
+    for name in ("vision", "text"):
+        spec, train, test = classification_task(name)
+        assert train["x"].shape == (spec.num_train, spec.feature_dim)
+        assert set(np.unique(train["y"])) <= set(range(spec.num_classes))
+
+
+def test_lm_batch_shapes():
+    b = lm_batch(vocab_size=128, batch=4, seq_len=16)
+    assert b["tokens"].shape == (4, 16)
+    assert b["labels"].shape == (4, 16)
+    assert int(b["tokens"].max()) < 128
+
+
+# ---------------------------------------------------------------------------
+# comm-cost models (Fig. 1 backbone)
+# ---------------------------------------------------------------------------
+
+def test_scaling_classes():
+    """MAR grows ~N log N; AR grows ~N^2 (ratio test at two sizes)."""
+    mb = 1_000
+    for n1, n2 in [(64, 512)]:
+        p1, p2 = plan_grid(n1), plan_grid(n2)
+        mar1 = topology.iteration_bytes("mar", n1, mb, p1)
+        mar2 = topology.iteration_bytes("mar", n2, mb, p2)
+        ar1 = topology.iteration_bytes("ar", n1, mb)
+        ar2 = topology.iteration_bytes("ar", n2, mb)
+        assert ar2 / ar1 > 0.8 * (n2 / n1) ** 2
+        assert mar2 / mar1 < 3.0 * (n2 / n1) * np.log2(n2) / np.log2(n1)
+
+
+def test_fig11_approx_aggregation_33pct():
+    """Group size 3 / 4 rounds at 125 peers cuts MAR bytes ~33% (Fig 11)."""
+    mb = 1_000
+    exact = topology.iteration_bytes(
+        "mar", 125, mb, plan_grid(125, group_size=5))
+    approx = topology.iteration_bytes(
+        "mar", 125, mb, plan_grid(125, group_size=3), num_rounds=4)
+    assert approx / exact == pytest.approx(2 / 3, rel=0.05)
+
+
+def test_butterfly_mode_cheaper():
+    p = plan_grid(125)
+    naive = topology.iteration_bytes("mar", 125, 1000, p)
+    btf = topology.iteration_bytes("mar", 125, 1000, p, mode="butterfly")
+    assert btf < 0.5 * naive
+
+
+def test_latency_rounds():
+    p = plan_grid(125)
+    assert topology.iteration_latency_rounds("mar", 125, p) == 3
+    assert topology.iteration_latency_rounds("rdfl", 125) == 124
+    assert topology.iteration_latency_rounds("ar", 125) == 1
+
+
+def test_control_plane_negligible():
+    n = 125
+    ctrl = topology.control_plane_bytes(n)
+    data = topology.iteration_bytes("mar", n, 100_000, plan_grid(n))
+    assert ctrl < 0.01 * data
+
+
+def test_complexity_table_shape():
+    rows = topology.complexity_table(1000, peer_counts=(16, 64))
+    assert len(rows) == 8
+    assert {r["technique"] for r in rows} == {"fedavg", "mar", "rdfl", "ar"}

@@ -1,0 +1,125 @@
+"""MAR aggregation semantics: exactness, churn masks, backend parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mar_allreduce as mar
+from repro.core.moshpit import GridPlan, plan_grid
+
+
+def _state(n, dim=7, seed=0):
+    x = np.random.default_rng(seed).normal(size=(n, dim)).astype(np.float32)
+    return {"x": jnp.asarray(x)}
+
+
+def test_exact_global_average_125():
+    """Paper §2.3: exact average after d rounds when N = M^d."""
+    p = plan_grid(125)
+    s = _state(125)
+    out = mar.mar_aggregate_sim(s, p)
+    gm = jnp.mean(s["x"], 0, keepdims=True)
+    np.testing.assert_allclose(out["x"], jnp.broadcast_to(gm, (125, 7)),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [8, 16, 27, 64])
+def test_exactness_various_grids(n):
+    p = plan_grid(n)
+    s = _state(n)
+    out = mar.mar_aggregate_sim(s, p)
+    gm = jnp.mean(s["x"], 0)
+    assert float(jnp.max(jnp.abs(out["x"] - gm[None]))) < 1e-5
+
+
+def test_fewer_rounds_is_approximate():
+    """Fig. 11: fewer rounds -> approximate average that still contracts."""
+    p = plan_grid(125)
+    s = _state(125)
+    gm = jnp.mean(s["x"], 0, keepdims=True)
+    d0 = float(jnp.mean(jnp.sum((s["x"] - gm) ** 2, -1)))
+    out1 = mar.mar_aggregate_sim(s, p, num_rounds=1)
+    d1 = float(jnp.mean(jnp.sum((out1["x"] - gm) ** 2, -1)))
+    out2 = mar.mar_aggregate_sim(s, p, num_rounds=2)
+    d2 = float(jnp.mean(jnp.sum((out2["x"] - gm) ** 2, -1)))
+    assert d1 < d0 * 0.5
+    assert d2 < d1 * 0.5
+    assert d2 > 1e-8  # genuinely approximate
+
+
+def test_dropout_only_affects_own_group():
+    """A dropped peer is excluded from its round-0 group's mean; other
+    round-0 groups are untouched."""
+    p = GridPlan(16, (4, 4))
+    s = _state(16)
+    mask = jnp.ones((16,)).at[0].set(0.0)
+    out = mar.mar_round_sim(s, p, 0, mask)
+    groups = p.groups_for_round(0)
+    for g in groups:
+        g = g.tolist()
+        if 0 in g:
+            others = [i for i in g if i != 0]
+            expect = jnp.mean(s["x"][jnp.asarray(others)], 0)
+        else:
+            expect = jnp.mean(s["x"][jnp.asarray(g)], 0)
+        for i in g:
+            np.testing.assert_allclose(out["x"][i], expect, atol=1e-5)
+
+
+def test_empty_group_keeps_state():
+    p = GridPlan(4, (2, 2))
+    s = _state(4)
+    mask = jnp.asarray([0.0, 0.0, 1.0, 1.0])
+    out = mar.mar_round_sim(s, p, 1, mask)  # round-1 groups: {0,1}, {2,3}
+    np.testing.assert_allclose(out["x"][0], s["x"][0])
+    np.testing.assert_allclose(out["x"][1], s["x"][1])
+
+
+def test_virtual_slot_padding():
+    """Non-power peer counts embed into a larger grid; result still
+    averages over the real peers of each group."""
+    p = plan_grid(10)  # capacity > 10
+    s = _state(10)
+    out = mar.mar_aggregate_sim(s, p)
+    assert out["x"].shape == (10, 7)
+    assert bool(jnp.all(jnp.isfinite(out["x"])))
+
+
+def test_device_backend_parity():
+    p = GridPlan(27, (3, 3, 3))
+    s = _state(27)
+    a = mar.mar_aggregate_sim(s, p)
+    b = mar.mar_aggregate_device(s, p)
+    np.testing.assert_allclose(a["x"], b["x"], atol=1e-5)
+
+
+def test_one_shot_equals_rounds_full_participation():
+    p = GridPlan(16, (4, 4))
+    s = _state(16)
+    a = mar.mar_aggregate_device(s, p)
+    b = mar.mar_aggregate_device(s, p, one_shot=True)
+    np.testing.assert_allclose(a["x"], b["x"], atol=1e-5)
+
+
+def test_all_to_all_baseline():
+    s = _state(9)
+    out = mar.allreduce_all_to_all_sim(s)
+    gm = jnp.mean(s["x"], 0)
+    np.testing.assert_allclose(out["x"], jnp.broadcast_to(gm, (9, 7)),
+                               atol=1e-6)
+
+
+@given(st.integers(2, 4), st.integers(1, 3), st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_masked_mean_bounded_property(m, d, seed):
+    """Group means stay within [min, max] of inputs (convexity)."""
+    n = m ** d
+    x = np.random.default_rng(seed).normal(size=(n, 3)).astype(np.float32)
+    mask = (np.random.default_rng(seed + 1).random(n) < 0.7).astype(
+        np.float32)
+    p = GridPlan(n, (m,) * d)
+    out = mar.mar_aggregate_sim({"x": jnp.asarray(x)}, p,
+                                jnp.asarray(mask))["x"]
+    assert float(jnp.max(out)) <= x.max() + 1e-5
+    assert float(jnp.min(out)) >= x.min() - 1e-5

@@ -1,0 +1,128 @@
+"""Moshpit-KD (Alg. 2/3) and decentralized DP (Alg. 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.federation import Federation, FederationConfig
+from repro.core.mkd import kl_divergence, select_teachers, student_loss
+from repro.core.dp import epsilon_estimate
+
+
+# ---------------------------------------------------------------------------
+# MKD units
+# ---------------------------------------------------------------------------
+
+def test_kl_divergence_basics():
+    p = jnp.asarray([[0.5, 0.5]])
+    assert float(kl_divergence(p, p)[0]) == pytest.approx(0.0, abs=1e-6)
+    q = jnp.asarray([[0.9, 0.1]])
+    assert float(kl_divergence(p, q)[0]) > 0
+
+
+def test_select_teachers_lowest_kl():
+    """Alg. 3: the selected teachers are the rho_l lowest-KL candidates."""
+    rng = np.random.default_rng(0)
+    my = jnp.asarray(rng.normal(size=(8, 10)), jnp.float32)
+    cands = jnp.stack([my + 0.01 * rng.normal(size=(8, 10)),   # close
+                       my + 3.0 * rng.normal(size=(8, 10)),    # far
+                       my + 0.02 * rng.normal(size=(8, 10)),   # close
+                       my + 5.0 * rng.normal(size=(8, 10))])   # far
+    mask = jnp.ones((4,))
+    w = select_teachers(my, cands, mask, tau=3.0, rho=0.5)
+    assert float(w[0]) > 0 and float(w[2]) > 0
+    assert float(w[1]) == 0 and float(w[3]) == 0
+    assert float(jnp.sum(w)) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_select_teachers_respects_mask():
+    my = jnp.zeros((4, 6))
+    cands = jnp.zeros((3, 4, 6))
+    mask = jnp.asarray([0.0, 1.0, 0.0])
+    w = select_teachers(my, cands, mask, tau=3.0, rho=0.9)
+    assert float(w[1]) == pytest.approx(1.0)
+    assert float(w[0]) == 0.0 and float(w[2]) == 0.0
+
+
+def test_student_loss_anneal():
+    """alpha=0 -> pure CE; alpha=1 -> pure (scaled) KL."""
+    rng = np.random.default_rng(1)
+    s = jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)
+    y = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    l_ce = student_loss(s, z, y, tau=3.0, alpha=jnp.asarray(0.0))
+    l_kl = student_loss(s, z, y, tau=3.0, alpha=jnp.asarray(1.0))
+    ce = -jnp.mean(jnp.take_along_axis(jax.nn.log_softmax(s), y[:, None], 1))
+    assert float(l_ce) == pytest.approx(float(ce), rel=1e-5)
+    l_same = student_loss(s, s, y, tau=3.0, alpha=jnp.asarray(1.0))
+    assert float(l_same) == pytest.approx(0.0, abs=1e-5)
+    assert float(l_kl) > 0
+
+
+def test_mkd_accelerates_early_convergence():
+    """Fig. 2: with KD, higher accuracy in the early iterations."""
+    accs = {}
+    for use_kd in (False, True):
+        cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                               use_kd=use_kd, kd_iterations=4,
+                               local_batches=2, seed=5)
+        fed = Federation(cfg)
+        state = fed.init_state()
+        for _ in range(8):
+            state = fed.step(state)
+        accs[use_kd] = fed.evaluate(state)
+    assert accs[True] > accs[False]
+
+
+def test_mkd_comm_overhead_accounted():
+    cfgs = [FederationConfig(n_peers=8, technique="mar", task="text",
+                             use_kd=kd, kd_iterations=4, seed=5)
+            for kd in (False, True)]
+    comms = []
+    for cfg in cfgs:
+        fed = Federation(cfg)
+        state = fed.init_state()
+        for _ in range(4):
+            state = fed.step(state)
+        comms.append(fed.comm_bytes)
+    assert comms[1] > comms[0]
+
+
+# ---------------------------------------------------------------------------
+# DP (Alg. 4)
+# ---------------------------------------------------------------------------
+
+def test_dp_training_runs_and_adapts_clip():
+    cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                           use_dp=True, noise_multiplier=0.3, seed=7)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    clip0 = float(state.dp["clip"])
+    for _ in range(6):
+        state = fed.step(state)
+    assert bool(jnp.all(jnp.isfinite(jax.tree.leaves(state.params)[0])))
+    assert float(state.dp["clip"]) != clip0  # gamma-quantile tracking
+
+
+def test_dp_noise_hurts_at_high_sigma():
+    accs = {}
+    for sigma in (0.1, 3.0):
+        cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                               use_dp=True, noise_multiplier=sigma,
+                               local_batches=4, seed=7)
+        fed = Federation(cfg)
+        state = fed.init_state()
+        for _ in range(15):
+            state = fed.step(state)
+        accs[sigma] = fed.evaluate(state)
+    assert accs[0.1] > accs[3.0]
+
+
+def test_epsilon_estimates():
+    # more noise -> lower epsilon; more iterations -> higher epsilon
+    assert epsilon_estimate(100, 1.0) < epsilon_estimate(100, 0.3)
+    assert epsilon_estimate(200, 1.0) > epsilon_estimate(100, 1.0)
+    # subsampling reduces epsilon
+    assert epsilon_estimate(100, 1.0, sampling_rate=0.1) \
+        < epsilon_estimate(100, 1.0)
+    assert epsilon_estimate(10, 0.0) == float("inf")

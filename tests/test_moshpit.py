@@ -1,0 +1,112 @@
+"""MAR grid math: coordinates, group keys, schedules (unit + property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.moshpit import (GridPlan, bytes_per_iteration,
+                                exchanges_per_iteration, mesh_grid_plan,
+                                plan_grid)
+
+
+def test_plan_grid_exact_powers():
+    assert plan_grid(125).dims == (5, 5, 5)
+    assert plan_grid(16).dims == (2, 2, 2, 2)
+    assert plan_grid(64).dims == (4, 4, 4) or plan_grid(64).is_exact
+    assert plan_grid(27).dims == (3, 3, 3)
+    for n in (125, 64, 27, 16, 8):
+        assert plan_grid(n).is_exact
+
+
+def test_plan_grid_explicit():
+    p = plan_grid(125, group_size=5)
+    assert p.dims == (5, 5, 5)
+    # paper Fig. 11: group size 3, d=5 covers 125 with padding
+    p3 = plan_grid(125, group_size=3)
+    assert p3.capacity >= 125 and all(d == 3 for d in p3.dims)
+
+
+def test_plan_grid_non_power():
+    p = plan_grid(100)
+    assert p.capacity >= 100
+    assert p.depth >= 2
+
+
+def test_coords_roundtrip():
+    p = GridPlan(24, (2, 3, 4))
+    peers = np.arange(24)
+    assert np.array_equal(p.index(p.coords(peers)), peers)
+
+
+def test_group_key_strikes_axis():
+    p = GridPlan(125, (5, 5, 5))
+    for rnd in range(3):
+        groups = p.groups_for_round(rnd)
+        assert len(groups) == 25
+        # each group differs only in coordinate `rnd`
+        for g in groups:
+            c = p.coords(g)
+            for ax in range(3):
+                n_unique = len(np.unique(c[:, ax]))
+                assert n_unique == (5 if ax == rnd else 1)
+
+
+def test_no_pair_revisited_across_rounds():
+    """The paper's key-update property: within one FL iteration no two
+    peers meet twice (for exact grids)."""
+    p = GridPlan(27, (3, 3, 3))
+    met = set()
+    for rnd in range(p.depth):
+        for g in p.groups_for_round(rnd):
+            for i in g:
+                for j in g:
+                    if i < j:
+                        assert (i, j) not in met, (rnd, i, j)
+                        met.add((i, j))
+
+
+def test_partner_matrix_consistency():
+    p = GridPlan(16, (4, 4))
+    for rnd in range(2):
+        pm = p.partner_matrix(rnd)
+        keys = p.group_key(np.arange(16), rnd)
+        for peer in range(16):
+            assert peer in pm[peer]
+            assert np.all(keys[pm[peer]] == keys[peer])
+
+
+def test_mesh_grid_plan():
+    assert mesh_grid_plan([16]).dims == (4, 4)
+    assert mesh_grid_plan([2, 16]).dims == (2, 4, 4)
+    assert mesh_grid_plan([2]).dims == (2,)
+
+
+def test_exchange_and_byte_counts():
+    p = GridPlan(125, (5, 5, 5))
+    assert exchanges_per_iteration(p) == 125 * 3 * 4
+    naive = bytes_per_iteration(p, 100, allreduce="naive")
+    butterfly = bytes_per_iteration(p, 100, allreduce="butterfly")
+    assert naive == 125 * 3 * 4 * 100
+    assert butterfly < naive
+
+
+@given(st.integers(2, 6), st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_groups_partition_property(m, d):
+    """Every round's groups partition the full peer set."""
+    if m ** d > 1296:
+        return
+    p = GridPlan(m ** d, (m,) * d)
+    for rnd in range(d):
+        groups = p.groups_for_round(rnd)
+        flat = np.sort(np.concatenate(groups))
+        assert np.array_equal(flat, np.arange(p.capacity))
+        assert all(len(g) == m for g in groups)
+
+
+@given(st.integers(2, 500))
+@settings(max_examples=50, deadline=None)
+def test_plan_grid_always_covers(n):
+    p = plan_grid(n)
+    assert p.capacity >= n
+    assert p.n_peers == n
+    assert all(m >= 2 for m in p.dims)

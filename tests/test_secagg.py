@@ -1,0 +1,95 @@
+"""Secure aggregation of the DP clipping indicator (paper §A.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.moshpit import GridPlan, plan_grid
+from repro.core.secagg import (masked_submissions, secure_group_sum,
+                               secure_indicator_average)
+
+
+def test_masks_cancel_in_group_sums():
+    plan = GridPlan(16, (4, 4))
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.integers(0, 2, 16), jnp.float32)
+    root = jax.random.PRNGKey(7)
+    for rnd in range(2):
+        sums, cnts = secure_group_sum(b, plan, rnd, root, t=3)
+        for g in plan.groups_for_round(rnd):
+            want = float(jnp.sum(b[jnp.asarray(g)]))
+            for peer in g:
+                assert float(sums[peer]) == pytest.approx(want, abs=1e-3)
+
+
+def test_individual_submissions_are_masked():
+    """A submission differs from the true value by O(mask range) —
+    the aggregator learns nothing from a single peer's message."""
+    plan = GridPlan(16, (4, 4))
+    b = jnp.zeros((16,), jnp.float32)
+    sub = masked_submissions(b, plan, 0, jax.random.PRNGKey(1), t=0)
+    # every peer has 3 partners; at least most submissions move far
+    # from the raw value 0
+    assert float(jnp.mean(jnp.abs(sub) > 1.0)) > 0.8
+
+
+def test_submissions_change_per_round_key():
+    plan = GridPlan(8, (2, 2, 2))
+    b = jnp.ones((8,), jnp.float32)
+    s1 = masked_submissions(b, plan, 0, jax.random.PRNGKey(1), t=0)
+    s2 = masked_submissions(b, plan, 0, jax.random.PRNGKey(1), t=1)
+    assert float(jnp.max(jnp.abs(s1 - s2))) > 1.0
+
+
+def test_full_depth_average_exact():
+    plan = plan_grid(27)
+    rng = np.random.default_rng(2)
+    b = jnp.asarray(rng.integers(0, 2, 27), jnp.float32)
+    avg = secure_indicator_average(b, plan, jax.random.PRNGKey(3), t=5)
+    np.testing.assert_allclose(np.asarray(avg),
+                               float(jnp.mean(b)) * np.ones(27), atol=1e-3)
+
+
+def test_dropout_consistency():
+    """A dead peer's pairwise masks never enter any submission, so sums
+    stay exact over survivors."""
+    plan = GridPlan(16, (4, 4))
+    rng = np.random.default_rng(4)
+    b = jnp.asarray(rng.integers(0, 2, 16), jnp.float32)
+    alive = jnp.ones((16,)).at[5].set(0.0)
+    sums, cnts = secure_group_sum(b, plan, 0, jax.random.PRNGKey(5), t=0,
+                                  alive=alive)
+    for g in plan.groups_for_round(0):
+        g = g.tolist()
+        live = [i for i in g if i != 5]
+        want = float(jnp.sum(b[jnp.asarray(live)])) if 5 in g \
+            else float(jnp.sum(b[jnp.asarray(g)]))
+        for peer in g:
+            assert float(sums[peer]) == pytest.approx(want, abs=1e-3)
+
+
+def test_dp_with_secagg_end_to_end():
+    from repro.core.federation import Federation, FederationConfig
+    cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                           use_dp=True, use_secagg=True,
+                           noise_multiplier=0.3, seed=9)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    clip0 = float(state.dp["clip"])
+    for _ in range(4):
+        state = fed.step(state)
+    assert bool(jnp.all(jnp.isfinite(jax.tree.leaves(state.params)[0])))
+    assert float(state.dp["clip"]) != clip0
+
+
+@given(st.integers(2, 4), st.integers(1, 3), st.integers(0, 500))
+@settings(max_examples=15, deadline=None)
+def test_secure_average_property(m, d, seed):
+    n = m ** d
+    plan = GridPlan(n, (m,) * d)
+    rng = np.random.default_rng(seed)
+    b = jnp.asarray(rng.random(n), jnp.float32)
+    avg = secure_indicator_average(b, plan, jax.random.PRNGKey(seed), t=1)
+    np.testing.assert_allclose(np.asarray(avg),
+                               float(jnp.mean(b)) * np.ones(n), atol=2e-3)
