@@ -1,8 +1,11 @@
 """Fig. 1 — performance gap: communication to reach a target accuracy.
 
-Trains MAR-FL / FedAvg / RDFL / AR-FL on the text task and reports
-bytes-to-target-accuracy plus the per-iteration byte model across peer
-counts (the paper's 'up to 10x less communication than RDFL/AR-FL').
+Trains every registered aggregation technique (the paper's MAR-FL /
+FedAvg / RDFL / AR-FL plus the beyond-paper gossip and hierarchical
+entries) on the text task and reports bytes-to-target-accuracy plus the
+per-iteration byte model across peer counts (the paper's 'up to 10x
+less communication than RDFL/AR-FL'). Per-source byte splits come from
+the federation's CommLedger.
 """
 from __future__ import annotations
 
@@ -26,7 +29,7 @@ def main(argv=None) -> int:
         emit("fig1_scaling", **row)
 
     # trained comm-to-accuracy
-    for tech in ("fedavg", "mar", "rdfl", "ar"):
+    for tech in ("fedavg", "hierarchical", "mar", "gossip", "rdfl", "ar"):
         cfg = FederationConfig(
             n_peers=s["peers"], technique=tech, task="text",
             local_batches=s["local_batches"], seed=args.seed)

@@ -22,6 +22,7 @@ MODULES = [
     "fig5_parity",
     "fig8_noniid",
     "fig11_approx_agg",
+    "wire_ladder",
     "kernel_bench",
 ]
 

@@ -1,0 +1,52 @@
+"""Wire-stage ladder — the scenario matrix the composable pipeline opens.
+
+Crosses aggregation techniques with wire-stage compositions (plain /
+int8-EF / async / DP and their previously-asserted-out combinations)
+on the sim backend and reports accuracy plus the CommLedger's per-source
+byte split for each cell (EXPERIMENTS.md §Perf C-ladder, sim view).
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit, scale, std_argparser
+from repro.core.federation import Federation, FederationConfig
+
+STAGES = {
+    "plain": {},
+    "int8_ef": dict(compress="int8_ef"),
+    "async": dict(async_aggregation=True),
+    "dp": dict(use_dp=True),
+    "async+int8_ef": dict(async_aggregation=True, compress="int8_ef"),
+    "dp+int8_ef": dict(use_dp=True, compress="int8_ef"),
+    "async+dp": dict(async_aggregation=True, use_dp=True),
+}
+
+
+def main(argv=None) -> int:
+    ap = std_argparser(__doc__)
+    ap.add_argument("--techniques", nargs="+",
+                    default=["mar", "gossip", "hierarchical"])
+    args = ap.parse_args(argv)
+    s = scale(args.full)
+
+    for tech in args.techniques:
+        for label, flags in STAGES.items():
+            cfg = FederationConfig(
+                n_peers=s["peers"], technique=tech, task="text",
+                local_batches=s["local_batches"], seed=args.seed, **flags)
+            fed = Federation(cfg)
+            state = fed.init_state()
+            for _ in range(s["iters"]):
+                state = fed.step(state)
+            by_source = "|".join(f"{k}:{v/1e6:.1f}"
+                                 for k, v in fed.ledger.by_source.items())
+            emit("wire_ladder", technique=tech, stages=label,
+                 acc=round(fed.evaluate(state), 4),
+                 comm_mb=round(fed.comm_bytes / 1e6, 1),
+                 by_source_mb=by_source)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -117,6 +117,7 @@ class Checkpointer:
             self._gc()
 
         if blocking:
+            self.wait()   # a pending async save may share .tmp-<step>
             write()
         else:
             self.wait()                              # one outstanding write
@@ -198,11 +199,21 @@ class Checkpointer:
 
         tree = jax.tree.map(remap, tree)
         if like is not None:
-            like_leaves = jax.tree.leaves(like)
-            got = jax.tree.leaves(tree)
-            tree = jax.tree.unflatten(
-                jax.tree.structure(like),
-                [jnp.asarray(g, l.dtype) for g, l in zip(got, like_leaves)])
+            # match leaves by *path*, not flatten order: the checkpoint
+            # may carry extra branches ``like`` lacks (or vice versa —
+            # e.g. a wire stage enabled/disabled between runs); a path
+            # missing from the checkpoint keeps the template's value
+            flat, _ = jax.tree_util.tree_flatten_with_path(like)
+            leaves = []
+            for p, leaf in flat:
+                node = tree
+                try:
+                    for e in p:
+                        node = node[_path_str(e)]
+                    leaves.append(jnp.asarray(node, leaf.dtype))
+                except (KeyError, TypeError):
+                    leaves.append(leaf)
+            tree = jax.tree.unflatten(jax.tree.structure(like), leaves)
         meta = dict(meta, n_peers=n_peers)
         return tree, meta
 

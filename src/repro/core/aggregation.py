@@ -1,0 +1,517 @@
+"""Composable aggregation pipeline: Aggregator x WireStage x CommLedger.
+
+This module is the strategy/wire/accounting spine of the FL system
+(DESIGN.md §6). It decomposes one FL aggregation into three orthogonal
+pieces so every technique x wire-transform x backend combination is a
+*configuration*, not a fork of the step function:
+
+* :class:`Aggregator` — *what* consensus is computed. A registry maps
+  technique names (``mar``, ``fedavg``, ``ar``, ``rdfl``, ``gossip``,
+  ``hierarchical``) to pure, jit-traceable callables
+  ``(state, mask) -> state`` over peer-stacked pytrees. The MAR entry
+  spans both execution backends (sim segment-means and the device
+  mesh's grid-reshape collectives — ``mar_allreduce.py``).
+
+* :class:`WireStage` — *how* the exchanged tensors are transformed on
+  the wire. Stages wrap any aggregator (or another stage): int8
+  error-feedback delta compression (:class:`Int8EFStage`), decentralized
+  DP with adaptive clipping and optional secure aggregation of the
+  clipping indicator (:class:`DPStage`), and staleness-1 delayed
+  application (:class:`AsyncStage`). Stage state (EF residuals, DP
+  clip bounds, pending aggregates) threads through the pipeline as one
+  pytree, so the whole composition stays jittable. Combinations the
+  old step-function forks asserted out — compress∘dp ("quantize after
+  noising"), async∘compress — are now just stage lists.
+
+* :class:`CommLedger` — *how many bytes* moved. Each aggregator reports
+  its analytic data-plane bytes (``topology.py``) and each stage
+  transforms them (e.g. / ``INT8_RATIO``); the pipeline records the
+  result per source so benchmarks read one ledger instead of calling
+  ``topology.iteration_bytes`` ad hoc at every step path.
+
+Canonical aggregation state is a dict ``{"p": params, "m": momentum}``
+with peers on the leading axis of every leaf; stages may grow it with
+extra keys (DP adds the smoothed delta ``"sd"`` and clipping indicator
+``"b"``) that are averaged alongside and stripped before returning.
+
+Stage order in a pipeline is outermost-first: ``[async, dp, int8_ef]``
+means the staleness-1 schedule wraps DP privatization which wraps
+quantized exchange — i.e. noising happens *before* quantization, and
+both ride the delayed-application schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology
+from repro.core.moshpit import GridPlan
+
+Array = jax.Array
+PyTree = Any
+# inner pipeline callable: (agg_state, pipe_state) -> (agg_state, pipe_state)
+InnerFn = Callable[[PyTree, Dict[str, PyTree]], Tuple[PyTree, Dict[str, PyTree]]]
+
+
+# ---------------------------------------------------------------------------
+# the shared masked-mean core
+# ---------------------------------------------------------------------------
+
+def finalize_masked_mean(num: Array, den: Array, own: Array,
+                         floor: float = 1.0) -> Array:
+    """Shared epilogue of every masked group mean in the system.
+
+    ``num`` — masked sum (f32), ``den`` — masked contributor count (or
+    push-sum weight), ``own`` — the value a peer keeps when its whole
+    group dropped (churn semantics, paper §3.1). Broadcasts, so ``num``/
+    ``den`` may carry keepdims group axes against a full-shape ``own``.
+    Both the sim backend (segment sums) and the device backend (grid
+    reshape + axis sums) reduce to this one mean-with-fallback; keeping
+    it in one place keeps their churn semantics provably identical.
+    ``floor`` guards the division — 1.0 for integer counts, small eps
+    for fractional push-sum weights.
+    """
+    mean = num / jnp.maximum(den, floor)
+    empty = (den == 0.0).astype(jnp.float32)
+    return mean * (1.0 - empty) + own.astype(jnp.float32) * empty
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CommLedger:
+    """Per-source communication accounting, replacing the ad-hoc
+    ``topology.iteration_bytes`` calls that used to sit (and disagree)
+    at every step-path call site."""
+
+    total_bytes: float = 0.0
+    by_source: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def record(self, source: str, nbytes: float) -> None:
+        self.total_bytes += nbytes
+        self.by_source[source] = self.by_source.get(source, 0.0) + nbytes
+
+    def reset(self) -> None:
+        self.total_bytes = 0.0
+        self.by_source.clear()
+
+
+# ---------------------------------------------------------------------------
+# strategy layer: aggregators + registry
+# ---------------------------------------------------------------------------
+
+AGGREGATORS: Dict[str, Type["Aggregator"]] = {}
+
+
+def register_aggregator(cls: Type["Aggregator"]) -> Type["Aggregator"]:
+    AGGREGATORS[cls.name] = cls
+    return cls
+
+
+def make_aggregator(name: str, plan: GridPlan, **kwargs: Any) -> "Aggregator":
+    if name not in AGGREGATORS:
+        raise ValueError(
+            f"unknown aggregation technique {name!r}; "
+            f"registered: {sorted(AGGREGATORS)}")
+    return AGGREGATORS[name](plan, **kwargs)
+
+
+class Aggregator:
+    """A consensus strategy: pure ``(state, mask) -> state`` plus its
+    analytic byte cost. Subclasses set ``name`` (the registry key) and
+    ``supports_device`` when the strategy lowers onto mesh collectives."""
+
+    name: str = "?"
+    supports_device: bool = False
+
+    def __init__(self, plan: GridPlan, num_rounds: Optional[int] = None,
+                 backend: str = "sim", one_shot: bool = False,
+                 comm_dtype: Optional[str] = None):
+        if backend not in ("sim", "device"):
+            raise ValueError(backend)
+        if backend == "device" and not self.supports_device:
+            raise ValueError(f"{self.name!r} has no device backend")
+        self.plan = plan
+        self.num_rounds = num_rounds
+        self.backend = backend
+        self.one_shot = one_shot
+        self.comm_dtype = comm_dtype
+
+    def __call__(self, state: PyTree, mask: Array) -> PyTree:
+        raise NotImplementedError
+
+    def iteration_bytes(self, n_active: int, model_bytes: int) -> float:
+        """Analytic data-plane bytes for one aggregation (topology.py)."""
+        return topology.iteration_bytes(
+            self.name, n_active, model_bytes, self.plan,
+            num_rounds=self.num_rounds)
+
+    def kd_bytes(self, n_active: int, model_bytes: int,
+                 kd_logit_bytes: int) -> float:
+        """Extra bytes a KD-enabled iteration adds on this topology."""
+        full = topology.iteration_bytes(
+            self.name, n_active, model_bytes, self.plan,
+            num_rounds=self.num_rounds, use_kd=True,
+            kd_logit_bytes=kd_logit_bytes)
+        return full - self.iteration_bytes(n_active, model_bytes)
+
+
+@register_aggregator
+class MarAggregator(Aggregator):
+    """Moshpit All-Reduce over a :class:`GridPlan` (the paper).
+
+    ``backend="sim"`` runs masked segment-means over the stacked peer
+    axis; ``backend="device"`` reshapes the (sharded) peer axis onto the
+    grid so XLA lowers each round to a replica-grouped all-reduce, with
+    ``one_shot`` / ``comm_dtype`` as the beyond-paper perf knobs."""
+
+    name = "mar"
+    supports_device = True
+
+    def __call__(self, state: PyTree, mask: Array) -> PyTree:
+        from repro.core import mar_allreduce as mar
+        if self.backend == "device":
+            return mar.mar_aggregate_device(
+                state, self.plan, mask, one_shot=self.one_shot,
+                comm_dtype=self.comm_dtype)
+        return mar.mar_aggregate_sim(state, self.plan, mask,
+                                     num_rounds=self.num_rounds)
+
+
+class _GlobalMeanAggregator(Aggregator):
+    """Strategies whose fixed point is the masked global mean; they
+    differ only in cost/latency models (topology.py) and churn story."""
+
+    def __call__(self, state: PyTree, mask: Array) -> PyTree:
+        from repro.core import mar_allreduce as mar
+        return mar.allreduce_all_to_all_sim(state, mask)
+
+
+@register_aggregator
+class FedAvgAggregator(_GlobalMeanAggregator):
+    """Client-server mean over participating peers: O(N) bytes, but a
+    central rendezvous (the baseline MAR-FL removes)."""
+    name = "fedavg"
+
+
+@register_aggregator
+class AllToAllAggregator(_GlobalMeanAggregator):
+    """Naive all-to-all All-Reduce FL: O(N^2) bytes, 1 round."""
+    name = "ar"
+
+
+@register_aggregator
+class RingAggregator(_GlobalMeanAggregator):
+    """RDFL-style ring circulation: O(N^2) bytes, N-1 sequential hops."""
+    name = "rdfl"
+
+
+@register_aggregator
+class HierarchicalAggregator(_GlobalMeanAggregator):
+    """Two-tier FedAvg (beyond-paper): peers average within their leaf
+    MAR group via a group leader, leaders average among themselves, and
+    the result is broadcast back down. The fixed point equals the global
+    masked mean; the cost model (2(N + #groups) model-units, 4 rounds)
+    sits between fedavg and mar — see ``topology.py``."""
+    name = "hierarchical"
+
+
+@register_aggregator
+class GossipAggregator(Aggregator):
+    """Push-sum ring gossip with doubling shifts (beyond-paper).
+
+    Round r averages each peer's (value, weight) pair with the peer
+    ``2^r`` positions behind it on a fixed ring; ``num_rounds`` defaults
+    to ceil(log2 N), after which every window covers the ring — exact
+    global mean for power-of-two N under full participation, a
+    weight-corrected approximation otherwise."""
+    name = "gossip"
+
+    def __init__(self, plan: GridPlan, num_rounds: Optional[int] = None,
+                 **kwargs: Any):
+        if num_rounds is None:
+            # pin the default here so execution and byte accounting use
+            # the same count: the ring covers all peers, active or not,
+            # so rounds depend on total N (not on n_active under churn)
+            num_rounds = max(1, int(np.ceil(np.log2(max(plan.n_peers,
+                                                        2)))))
+        super().__init__(plan, num_rounds=num_rounds, **kwargs)
+
+    def __call__(self, state: PyTree, mask: Array) -> PyTree:
+        from repro.core import mar_allreduce as mar
+        return mar.gossip_aggregate_sim(state, mask,
+                                        rounds=self.num_rounds)
+
+
+#: registry-backed technique list (import-stable name for configs/tests)
+TECHNIQUES: Tuple[str, ...] = tuple(AGGREGATORS)
+
+
+# ---------------------------------------------------------------------------
+# wire-stage layer
+# ---------------------------------------------------------------------------
+
+WIRE_STAGES: Dict[str, Type["WireStage"]] = {}
+
+
+def register_stage(cls: Type["WireStage"]) -> Type["WireStage"]:
+    WIRE_STAGES[cls.name] = cls
+    return cls
+
+
+class WireStage:
+    """A composable transform around an aggregator (or another stage).
+
+    ``apply`` receives the canonical agg state, the *whole* pipeline
+    state dict (its own slice under ``self.name``), the participation
+    mask and a stage-unique rng key; it must call ``inner`` exactly once
+    and return (agg_state, pipe_state) with its own slice updated.
+    ``transform_bytes`` maps the wrapped pipeline's wire bytes to this
+    stage's (e.g. a compression ratio); identity by default.
+    """
+
+    name: str = "?"
+
+    def init(self, template: PyTree) -> Optional[PyTree]:
+        """Initial stage state for an agg-state template; None if
+        stateless."""
+        return None
+
+    def apply(self, inner: InnerFn, state: PyTree,
+              pipe_state: Dict[str, PyTree], mask: Array,
+              rng: Array) -> Tuple[PyTree, Dict[str, PyTree]]:
+        raise NotImplementedError
+
+    def transform_bytes(self, inner_bytes: float, n_active: int,
+                        model_bytes: int) -> float:
+        return inner_bytes
+
+
+@register_stage
+class Int8EFStage(WireStage):
+    """int8 error-feedback delta compression (core/compression.py).
+
+    Quantizes each peer's delta against the shared reference point,
+    aggregates the dequantized deltas through the wrapped pipeline, and
+    re-anchors: ref' = ref + agg(delta). The per-peer quantization
+    residual carries into the next iteration (EF-SGD), so the bias
+    cancels over time. Only the ``"p"`` entry is compressed — momentum
+    (and any stage-added keys) travel exact in sim to isolate the theta
+    quantization error; accounting discounts all wire bytes uniformly.
+    """
+
+    name = "int8_ef"
+
+    def init(self, template: PyTree) -> PyTree:
+        # err starts as zeros (not None) so the stage-state pytree
+        # structure is stable across iterations — no retrace on the
+        # second step, and checkpoints restore onto a fresh template
+        ref = jax.tree.map(lambda x: x.astype(jnp.float32), template["p"])
+        return {"ref": ref, "err": jax.tree.map(jnp.zeros_like, ref)}
+
+    def apply(self, inner, state, pipe_state, mask, rng):
+        from repro.core.compression import compress_tree
+        own = pipe_state[self.name]
+        ref = own["ref"]
+        delta = jax.tree.map(lambda p, r: p.astype(jnp.float32) - r,
+                             state["p"], ref)
+        deq, new_err = compress_tree(delta, own["err"])
+        out, pipe_state = inner({**state, "p": deq}, pipe_state)
+        new_ref = jax.tree.map(lambda r, d: r + d, ref, out["p"])
+        new_p = jax.tree.map(lambda nr, p: nr.astype(p.dtype),
+                             new_ref, state["p"])
+        return ({**out, "p": new_p},
+                {**pipe_state, self.name: {"ref": new_ref, "err": new_err}})
+
+    def transform_bytes(self, inner_bytes, n_active, model_bytes):
+        from repro.core.compression import INT8_RATIO
+        return inner_bytes / INT8_RATIO
+
+
+@register_stage
+class DPStage(WireStage):
+    """Decentralized DP with adaptive clipping (paper Alg. 4; core/dp.py).
+
+    Clips + noises each peer's local delta, lets the wrapped pipeline
+    average the privatized models (plus the smoothed delta and — unless
+    ``use_secagg`` routes it through pairwise-masked secure aggregation —
+    the clipping indicator), then updates the shared clipping bound.
+    Wire bytes are unchanged versus the plain path: the indicator is
+    scalar-negligible and the smoothed delta rides the same exchange in
+    the analytic model (DESIGN.md §6)."""
+
+    name = "dp"
+
+    def __init__(self, plan: GridPlan, noise_multiplier: float = 0.3,
+                 clip_init: float = 1.0, use_secagg: bool = False):
+        self.plan = plan
+        self.noise_multiplier = noise_multiplier
+        self.clip_init = clip_init
+        self.use_secagg = use_secagg
+
+    def init(self, template: PyTree) -> PyTree:
+        from repro.core.dp import dp_init
+        return dp_init(template["p"], self.clip_init)
+
+    def apply(self, inner, state, pipe_state, mask, rng):
+        from repro.core.dp import dp_transform
+        carried: Dict[str, Any] = {}
+
+        def aggregate_fn(agg_state):
+            out, carried["pipe"] = inner(agg_state, pipe_state)
+            return out
+
+        out_state, new_dp = dp_transform(
+            aggregate_fn, state, pipe_state[self.name], mask, rng,
+            noise_multiplier=self.noise_multiplier, plan=self.plan,
+            use_secagg=self.use_secagg)
+        return out_state, {**carried["pipe"], self.name: new_dp}
+
+
+@register_stage
+class AsyncStage(WireStage):
+    """Staleness-1 delayed application (beyond-paper; DESIGN.md §5).
+
+    The aggregate launched for iteration t's snapshot is *applied* at
+    t+1 with a local-progress correction —
+    ``x_{t+1} = agg(y_{t-1}) + (y_t - y_{t-1})`` — so on real hardware
+    the collective overlaps the next iteration's compute instead of
+    blocking. Wraps any inner pipeline: whatever the wrapped stages
+    produce for snapshot t is what gets applied at t+1."""
+
+    name = "async"
+
+    def init(self, template: PyTree) -> PyTree:
+        # zeros placeholders + a has-pending flag keep the stage-state
+        # pytree structure identical on every iteration (single jit
+        # trace, checkpoint-stable) — same rationale as Int8EFStage
+        zeros = jax.tree.map(jnp.zeros_like, template)
+        return {"pending": {"agg": zeros, "snap": zeros},
+                "has": jnp.zeros((), jnp.float32)}
+
+    def apply(self, inner, state, pipe_state, mask, rng):
+        agg_out, pipe_state = inner(state, pipe_state)
+        own = pipe_state[self.name]
+        pending = own["pending"]
+        # first iteration (has=0): no pending aggregate — pass through
+        out = jax.tree.map(
+            lambda ag, y, sn: jnp.where(
+                own["has"] > 0,
+                (ag + (y.astype(ag.dtype)
+                       - sn.astype(ag.dtype))).astype(y.dtype),
+                y),
+            pending["agg"], state, pending["snap"])
+        new_own = {"pending": {"agg": agg_out, "snap": state},
+                   "has": jnp.ones((), jnp.float32)}
+        return out, {**pipe_state, self.name: new_own}
+
+
+# ---------------------------------------------------------------------------
+# the pipeline
+# ---------------------------------------------------------------------------
+
+class AggregationPipeline:
+    """An aggregator wrapped by zero or more wire stages.
+
+    Pure and jit-traceable: ``pipeline(state, pipe_state, mask, rng)``
+    returns the aggregated state plus updated stage states. Stage order
+    is outermost-first. Byte accounting mirrors the execution nesting:
+    the aggregator's analytic bytes pass inner-to-outer through each
+    stage's ``transform_bytes``.
+    """
+
+    def __init__(self, aggregator: Aggregator,
+                 stages: Sequence[WireStage] = ()):
+        self.aggregator = aggregator
+        self.stages = tuple(stages)
+        names = [s.name for s in self.stages]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate wire stages: {names}")
+
+    @property
+    def stage_names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.stages)
+
+    def init_state(self, template: PyTree) -> Dict[str, PyTree]:
+        out: Dict[str, PyTree] = {}
+        for stage in self.stages:
+            st = stage.init(template)
+            if st is not None:
+                out[stage.name] = st
+        return out
+
+    def __call__(self, state: PyTree, pipe_state: Dict[str, PyTree],
+                 mask: Array, rng: Array
+                 ) -> Tuple[PyTree, Dict[str, PyTree]]:
+        def run(i: int, state: PyTree, pipe_state: Dict[str, PyTree]):
+            if i == len(self.stages):
+                return self.aggregator(state, mask), pipe_state
+            inner = lambda s, ps: run(i + 1, s, ps)  # noqa: E731
+            return self.stages[i].apply(inner, state, pipe_state, mask,
+                                        jax.random.fold_in(rng, i))
+        return run(0, state, pipe_state)
+
+    # -- accounting -----------------------------------------------------
+    def iteration_bytes(self, n_active: int, model_bytes: int) -> float:
+        """Wire bytes of one aggregation after all stage transforms."""
+        b = self.aggregator.iteration_bytes(n_active, model_bytes)
+        for stage in reversed(self.stages):      # inner-to-outer
+            b = stage.transform_bytes(b, n_active, model_bytes)
+        return b
+
+    def record_iteration(self, ledger: CommLedger, n_active: int,
+                         model_bytes: int, use_kd: bool = False,
+                         kd_logit_bytes: int = 0) -> float:
+        """Record one FL iteration's bytes; returns the total recorded.
+
+        KD traffic (teacher-model pulls + logits, MKD) is recorded
+        separately and untransformed — distillation exchanges don't ride
+        the compressed delta wire format.
+        """
+        data = self.iteration_bytes(n_active, model_bytes)
+        ledger.record(f"agg/{self.aggregator.name}", data)
+        total = data
+        if use_kd:
+            kd = self.aggregator.kd_bytes(n_active, model_bytes,
+                                          kd_logit_bytes)
+            if kd:
+                ledger.record("kd", kd)
+                total += kd
+        return total
+
+
+def build_pipeline(technique: str, plan: GridPlan, *,
+                   num_rounds: Optional[int] = None,
+                   backend: str = "sim",
+                   one_shot: bool = False,
+                   comm_dtype: Optional[str] = None,
+                   async_aggregation: bool = False,
+                   use_dp: bool = False,
+                   noise_multiplier: float = 0.3,
+                   dp_clip_init: float = 1.0,
+                   use_secagg: bool = False,
+                   compress: Optional[str] = None) -> AggregationPipeline:
+    """Config-driven pipeline assembly (the one place that fixes stage
+    order): async wraps DP wraps compression wraps the aggregator, so
+    noising precedes quantization and both ride the delayed schedule."""
+    aggregator = make_aggregator(technique, plan, num_rounds=num_rounds,
+                                 backend=backend, one_shot=one_shot,
+                                 comm_dtype=comm_dtype)
+    stages: List[WireStage] = []
+    if async_aggregation:
+        stages.append(AsyncStage())
+    if use_dp:
+        stages.append(DPStage(plan, noise_multiplier=noise_multiplier,
+                              clip_init=dp_clip_init,
+                              use_secagg=use_secagg))
+    if compress is not None:
+        if compress != "int8_ef":
+            raise ValueError(f"unknown compression {compress!r}")
+        stages.append(Int8EFStage())
+    return AggregationPipeline(aggregator, stages)

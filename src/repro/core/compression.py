@@ -13,8 +13,10 @@ Protocol (per FL iteration, sim backend):
     exchange  = MAR group means over deQ(q_i)  # wire format: int8+scale
     theta_i'  = ref' = ref_i + mean(deQ(q))    # all peers re-anchor
 
-``FederationConfig(compress="int8_ef")`` activates it; communication
-accounting divides data-plane bytes by the compression ratio.
+``FederationConfig(compress="int8_ef")`` activates it through the
+composable :class:`~repro.core.aggregation.Int8EFStage`, which wraps any
+aggregator (and composes with DP/async stages); communication accounting
+divides data-plane bytes by the compression ratio.
 """
 from __future__ import annotations
 
@@ -65,23 +67,3 @@ def compress_tree(tree: PyTree, error: Optional[PyTree]
     return deqs, errs
 
 
-def compressed_aggregate(aggregate_fn, params: PyTree, momentum: PyTree,
-                         ref: PyTree, error: Optional[PyTree],
-                         a_mask: Array) -> Tuple[PyTree, PyTree, PyTree,
-                                                 PyTree]:
-    """EF-int8 MAR: aggregate quantized deltas against the shared ref.
-
-    Returns (new_params, new_momentum, new_ref, new_error). Momentum is
-    aggregated uncompressed here only in value — its wire bytes are
-    discounted by the same ratio in ``topology`` accounting since the
-    identical protocol applies (kept exact in sim to isolate the theta
-    quantization error in tests).
-    """
-    delta = jax.tree.map(
-        lambda p, r: p.astype(jnp.float32) - r, params, ref)
-    deq, new_error = compress_tree(delta, error)
-    agg = aggregate_fn({"d": deq, "m": momentum}, a_mask)
-    new_ref = jax.tree.map(lambda r, d: r + d, ref, agg["d"])
-    new_params = jax.tree.map(
-        lambda nr, p: nr.astype(p.dtype), new_ref, params)
-    return new_params, agg["m"], new_ref, new_error

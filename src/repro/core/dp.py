@@ -56,17 +56,28 @@ def _global_norm(tree: PyTree, axis0: bool = True) -> Array:
     return jnp.sqrt(sum(sq))
 
 
-def dp_aggregate(fed, params: PyTree, momentum: PyTree,
-                 dp_state: Dict[str, PyTree], a_mask: Array, rng: Array
-                 ) -> Tuple[PyTree, PyTree, Dict[str, PyTree]]:
-    """Alg. 4 for the sim backend. Returns (params, momentum, dp_state)."""
-    cfg = fed.cfg
+def dp_transform(aggregate_fn, state: PyTree, dp_state: Dict[str, PyTree],
+                 a_mask: Array, rng: Array, *, noise_multiplier: float,
+                 plan=None, use_secagg: bool = False
+                 ) -> Tuple[PyTree, Dict[str, PyTree]]:
+    """Alg. 4 as a wire transform around any aggregation.
+
+    ``aggregate_fn`` is the wrapped pipeline's ``(agg_state) ->
+    agg_state`` (in the composable architecture this is the inner
+    pipeline — see :class:`~repro.core.aggregation.DPStage`); ``state``
+    is the canonical ``{"p": params, "m": momentum}`` dict. Returns the
+    privatized, aggregated state (extra keys stripped) and the new DP
+    state. ``plan`` (a :class:`GridPlan`) is only needed when
+    ``use_secagg`` routes the clipping indicator through
+    pairwise-masked secure aggregation.
+    """
+    params, momentum = state["p"], state["m"]
     n_t = jnp.maximum(jnp.sum(a_mask), 1.0)
     c_t = dp_state["clip"]
 
     # lines 1-3: noise calibration
     sigma_b = n_t / 20.0
-    z_delta = (cfg.noise_multiplier ** -2
+    z_delta = (noise_multiplier ** -2
                - (2.0 * sigma_b) ** -2) ** -0.5
     sigma_delta = z_delta * c_t
 
@@ -104,20 +115,21 @@ def dp_aggregate(fed, params: PyTree, momentum: PyTree,
     theta_hat = jax.tree.map(
         lambda g, sd: g + ETA_U * sd, dp_state["last_global"], smooth)
 
-    # lines 10-15: MAR over (theta_hat, momentum, b, smooth_delta).
+    # lines 10-15: aggregate (theta_hat, momentum, b, smooth_delta).
     # The binary indicator leaks whether a peer clipped, so with
     # use_secagg it travels through pairwise-masked secure aggregation
     # (core/secagg.py; paper §A.2) instead of the plain group mean.
-    agg_state = {"p": theta_hat, "m": momentum, "sd": smooth}
-    if getattr(fed.cfg, "use_secagg", False):
+    agg_state = {**state, "p": theta_hat, "sd": smooth}
+    if use_secagg:
         from repro.core.secagg import secure_indicator_average
+        assert plan is not None, "use_secagg needs a GridPlan"
         b_bar = secure_indicator_average(
-            b_ind, fed.plan, jax.random.fold_in(rng, 777),
+            b_ind, plan, jax.random.fold_in(rng, 777),
             t=0, alive=a_mask)
-        agg_state = fed._aggregate(agg_state, a_mask)
+        agg_state = aggregate_fn(agg_state)
     else:
         agg_state["b"] = b_ind
-        agg_state = fed._aggregate(agg_state, a_mask)
+        agg_state = aggregate_fn(agg_state)
         b_bar = agg_state["b"]                           # [N] per-peer view
 
     new_params = jax.tree.map(
@@ -141,7 +153,9 @@ def dp_aggregate(fed, params: PyTree, momentum: PyTree,
         dp_state["smooth_delta"], agg_state["sd"])
     new_has = jnp.maximum(has, a_mask)
 
-    return new_params, new_m, {
+    out = {k: v for k, v in agg_state.items() if k not in ("sd", "b")}
+    out["p"], out["m"] = new_params, new_m
+    return out, {
         "last_global": new_last, "smooth_delta": new_sd,
         "has_delta": new_has, "clip": new_clip,
     }

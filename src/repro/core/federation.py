@@ -1,18 +1,26 @@
 """The MAR-FL training loop (Alg. 1) and its baselines (sim backend).
 
 Peers are the leading axis of every state pytree leaf; local updates are
-vmapped Momentum-SGD; aggregation dispatches on ``technique``:
+vmapped Momentum-SGD; aggregation runs through one composable
+:class:`~repro.core.aggregation.AggregationPipeline`:
 
-* ``mar``     — Moshpit All-Reduce over a :class:`GridPlan` (the paper)
-* ``fedavg``  — client-server mean over participating peers
-* ``rdfl``    — ring-decentralized FL (global mean; ring cost model)
-* ``ar``      — naive all-to-all All-Reduce FL
+* the **technique** picks the :class:`Aggregator` from the registry —
+  ``mar`` (the paper), ``fedavg``, ``rdfl``, ``ar``, plus beyond-paper
+  ``gossip`` and ``hierarchical``;
+* **wire stages** compose around it from config flags — staleness-1
+  async application, DP privatization (with optional secure aggregation
+  of the clipping indicator), int8 error-feedback delta compression.
+  Any stage combination is legal (DESIGN.md §6); e.g. compress + DP
+  quantizes *after* noising, async + compress delays the quantized
+  aggregate one iteration.
 
-All four produce the *same* global average under full participation
-(paper Fig. 5 "qualitative identity"); they differ in communication cost
-(``topology.py``) and churn semantics. Partial participation and dropout
-follow §3.1: U_t peers run local updates; A_t = U_t minus dropouts joins
-aggregation; non-participants carry state forward (Alg. 1 line 5).
+The exact-mean techniques produce the *same* global average under full
+participation (paper Fig. 5 "qualitative identity"); they differ in
+communication cost (``topology.py``, tracked per source by the
+:class:`CommLedger`) and churn semantics. Partial participation and
+dropout follow §3.1: U_t peers run local updates; A_t = U_t minus
+dropouts joins aggregation; non-participants carry state forward
+(Alg. 1 line 5).
 
 One FL iteration is a single jitted function of (state, masks, rng);
 the loop is host-side so benchmarks can interleave evaluation and
@@ -22,14 +30,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mar_allreduce as mar
 from repro.core import topology
+from repro.core.aggregation import (TECHNIQUES, AggregationPipeline,
+                                    CommLedger, build_pipeline)
 from repro.core.moshpit import GridPlan, plan_grid
 from repro.data.partition import dirichlet_partition, iid_partition
 from repro.data.synthetic import classification_task
@@ -38,8 +47,6 @@ from repro.optim.sgdm import momentum_sgd_init, momentum_sgd_step
 
 Array = jax.Array
 PyTree = Any
-
-TECHNIQUES = ("mar", "fedavg", "rdfl", "ar")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,17 +73,17 @@ class FederationConfig:
     kd_temperature: float = 3.0       # tau
     kd_selection_ratio: float = 0.4   # rho_l
     kd_epochs: int = 1                # E
-    # DP (Alg. 4)
+    # DP wire stage (Alg. 4)
     use_dp: bool = False
     noise_multiplier: float = 0.3     # sigma_mult
     dp_clip_init: float = 1.0         # C_0
     use_secagg: bool = False          # pairwise-masked indicator (§A.2)
-    # beyond-paper: staleness-1 aggregation — the MAR result computed at
+    # async wire stage: staleness-1 aggregation — the result computed at
     # iteration t is *applied* at t+1, so its collectives overlap the
-    # next iteration's compute (async/delayed averaging; DESIGN.md §5)
+    # next iteration's compute (delayed averaging; DESIGN.md §5)
     async_aggregation: bool = False
-    # beyond-paper: int8 error-feedback delta compression on the wire
-    # (core/compression.py) — 4x fewer MAR bytes, bias-free over time
+    # compression wire stage: int8 error-feedback delta compression on
+    # the wire (core/compression.py) — 4x fewer bytes, bias-free in time
     compress: Optional[str] = None    # None | "int8_ef"
     seed: int = 0
 
@@ -90,21 +97,48 @@ class FederationState:
     momentum: PyTree                  # [N, ...]
     iteration: int
     rng: Array
-    dp: Optional[Dict[str, PyTree]] = None   # see core/dp.py
+    # wire-stage state keyed by stage name: "dp" (clip bound, smoothed
+    # deltas), "async" (pending aggregate), "int8_ef" (ref + EF residual)
+    pipe: Dict[str, PyTree] = dataclasses.field(default_factory=dict)
     kd_lambda: float = 1.0
-    pending: Optional[PyTree] = None  # staleness-1 aggregated state
-    ref: Optional[PyTree] = None      # int8_ef shared reference point
-    ef_error: Optional[PyTree] = None # int8_ef residual carry
+
+    # -- legacy accessors (pre-pipeline field names) --------------------
+    @property
+    def dp(self) -> Optional[Dict[str, PyTree]]:
+        return self.pipe.get("dp")
+
+    @property
+    def pending(self) -> Optional[PyTree]:
+        a = self.pipe.get("async")
+        return a["pending"] if a else None
+
+    @property
+    def ref(self) -> Optional[PyTree]:
+        c = self.pipe.get("int8_ef")
+        return c["ref"] if c else None
+
+    @property
+    def ef_error(self) -> Optional[PyTree]:
+        c = self.pipe.get("int8_ef")
+        return c["err"] if c else None
 
 
 class Federation:
-    """Owns the task data, the jitted iteration fns, and the comm ledger."""
+    """Owns the task data, the jitted iteration fn, the aggregation
+    pipeline, and the comm ledger."""
 
     def __init__(self, cfg: FederationConfig):
         if cfg.technique not in TECHNIQUES:
             raise ValueError(cfg.technique)
         self.cfg = cfg
         self.plan = cfg.grid()
+        self.pipeline: AggregationPipeline = build_pipeline(
+            cfg.technique, self.plan, num_rounds=cfg.mar_rounds,
+            async_aggregation=cfg.async_aggregation,
+            use_dp=cfg.use_dp, noise_multiplier=cfg.noise_multiplier,
+            dp_clip_init=cfg.dp_clip_init, use_secagg=cfg.use_secagg,
+            compress=cfg.compress)
+        self.ledger = CommLedger()
         spec, train, test = classification_task(cfg.task, seed=cfg.seed)
         self.spec = spec
         self.test = {k: jnp.asarray(v) for k, v in test.items()}
@@ -131,10 +165,13 @@ class Federation:
 
         self.model_bytes = topology.pytree_bytes(
             self.init_fn(jax.random.PRNGKey(0))) * 2  # theta + momentum
-        self.comm_bytes = 0.0
         self._it_fn = jax.jit(self._iteration,
-                              static_argnames=("use_kd", "use_dp",
-                                               "do_aggregate"))
+                              static_argnames=("use_kd", "do_aggregate"))
+
+    @property
+    def comm_bytes(self) -> float:
+        """Total data-plane bytes so far (CommLedger-backed)."""
+        return self.ledger.total_bytes
 
     # ------------------------------------------------------------------
     def init_state(self) -> FederationState:
@@ -144,15 +181,10 @@ class Federation:
             x[None], (self.cfg.n_peers,) + x.shape)
         params = jax.tree.map(stack, params0)
         mom = momentum_sgd_init(params)
-        state = FederationState(params=params, momentum=mom, iteration=0,
-                                rng=jax.random.PRNGKey(self.cfg.seed + 7))
-        if self.cfg.use_dp:
-            from repro.core.dp import dp_init
-            state.dp = dp_init(params, self.cfg.dp_clip_init)
-        if self.cfg.compress == "int8_ef":
-            state.ref = jax.tree.map(
-                lambda x: x.astype(jnp.float32), params)
-        return state
+        pipe = self.pipeline.init_state({"p": params, "m": mom})
+        return FederationState(params=params, momentum=mom, iteration=0,
+                               rng=jax.random.PRNGKey(self.cfg.seed + 7),
+                               pipe=pipe)
 
     # ------------------------------------------------------------------
     # masks
@@ -202,13 +234,11 @@ class Federation:
                                      self.data_y, keys)
 
     # ------------------------------------------------------------------
-    # one FL iteration (jitted)
+    # one FL iteration (jitted): local update -> (MKD) -> pipeline
     # ------------------------------------------------------------------
-    def _iteration(self, params, momentum, dp_state, u_mask, a_mask, rng,
-                   kd_lambda, use_kd: bool, use_dp: bool,
-                   do_aggregate: bool = True):
-        cfg = self.cfg
-        k_local, k_kd, k_dp = jax.random.split(rng, 3)
+    def _iteration(self, params, momentum, pipe, u_mask, a_mask, rng,
+                   kd_lambda, use_kd: bool, do_aggregate: bool = True):
+        k_local, k_kd, k_agg = jax.random.split(rng, 3)
 
         new_p, new_m = self._local_update(params, momentum, k_local)
         # Alg. 1 line 5: non-participants keep previous state
@@ -224,27 +254,10 @@ class Federation:
                 self, params, momentum, a_mask, k_kd, kd_lambda)
 
         if not do_aggregate:
-            return params, momentum, dp_state
-        if use_dp:
-            from repro.core.dp import dp_aggregate
-            params, momentum, dp_state = dp_aggregate(
-                self, params, momentum, dp_state, a_mask, k_dp)
-        else:
-            state = {"p": params, "m": momentum}
-            state = self._aggregate(state, a_mask)
-            params, momentum = state["p"], state["m"]
-        return params, momentum, dp_state
-
-    def _aggregate(self, state: PyTree, a_mask: Array) -> PyTree:
-        cfg = self.cfg
-        if cfg.technique == "mar":
-            return mar.mar_aggregate_sim(state, self.plan, a_mask,
-                                         num_rounds=cfg.mar_rounds)
-        if cfg.technique in ("fedavg", "ar"):
-            return mar.allreduce_all_to_all_sim(state, a_mask)
-        if cfg.technique == "rdfl":
-            return mar.ring_allreduce_sim(state, a_mask)
-        raise ValueError(cfg.technique)
+            return params, momentum, pipe
+        out, pipe = self.pipeline({"p": params, "m": momentum}, pipe,
+                                  a_mask, k_agg)
+        return out["p"], out["m"], pipe
 
     # ------------------------------------------------------------------
     def step(self, state: FederationState,
@@ -257,102 +270,17 @@ class Federation:
         use_kd = cfg.use_kd and state.iteration < cfg.kd_iterations
         kd_lambda = max(0.0, 1.0 - state.iteration / max(cfg.kd_iterations, 1))
 
-        if cfg.async_aggregation:
-            return self._step_async(state, u, a, rng, it_rng, use_kd,
-                                    kd_lambda)
-        if cfg.compress == "int8_ef":
-            return self._step_compressed(state, u, a, rng, it_rng,
-                                         use_kd, kd_lambda)
-
-        params, momentum, dp_state = self._it_fn(
-            state.params, state.momentum, state.dp,
+        params, momentum, pipe = self._it_fn(
+            state.params, state.momentum, state.pipe,
             jnp.asarray(u), jnp.asarray(a), it_rng,
-            jnp.asarray(kd_lambda, jnp.float32),
-            use_kd=use_kd, use_dp=cfg.use_dp)
+            jnp.asarray(kd_lambda, jnp.float32), use_kd=use_kd)
 
-        self.comm_bytes += topology.iteration_bytes(
-            cfg.technique, int(a.sum()), self.model_bytes, self.plan,
-            num_rounds=cfg.mar_rounds, use_kd=use_kd,
+        self.pipeline.record_iteration(
+            self.ledger, int(a.sum()), self.model_bytes, use_kd=use_kd,
             kd_logit_bytes=self._kd_logit_bytes() if use_kd else 0)
         return FederationState(params=params, momentum=momentum,
                                iteration=state.iteration + 1, rng=rng,
-                               dp=dp_state, kd_lambda=kd_lambda)
-
-    # ------------------------------------------------------------------
-    # staleness-1 aggregation (beyond-paper; DESIGN.md §5): the MAR
-    # launched for iteration t's snapshot is applied at t+1 with a local
-    # progress correction — x_{t+1} = agg(y_{t-1}) + (y_t - y_{t-1}) —
-    # so on real hardware the collective overlaps iteration t+1's
-    # compute instead of blocking iteration t.
-    # ------------------------------------------------------------------
-    def _step_async(self, state, u, a, rng, it_rng, use_kd, kd_lambda):
-        cfg = self.cfg
-        assert not cfg.use_dp, "async_aggregation + DP not supported"
-        y_p, y_m, _ = self._it_fn(
-            state.params, state.momentum, None,
-            jnp.asarray(u), jnp.asarray(a), it_rng,
-            jnp.asarray(kd_lambda, jnp.float32),
-            use_kd=use_kd, use_dp=False, do_aggregate=False)
-
-        if state.pending is not None:
-            corr = lambda agg, y, snap: jax.tree.map(
-                lambda ag, yy, sn: ag + (yy.astype(ag.dtype)
-                                         - sn.astype(ag.dtype)),
-                agg, y, snap)
-            new_p = corr(state.pending["agg_p"], y_p,
-                         state.pending["snap_p"])
-            new_m = corr(state.pending["agg_m"], y_m,
-                         state.pending["snap_m"])
-        else:
-            new_p, new_m = y_p, y_m
-
-        agg = self._agg_fn({"p": y_p, "m": y_m}, jnp.asarray(a))
-        self.comm_bytes += topology.iteration_bytes(
-            cfg.technique, int(a.sum()), self.model_bytes, self.plan,
-            num_rounds=cfg.mar_rounds)
-        return FederationState(
-            params=new_p, momentum=new_m,
-            iteration=state.iteration + 1, rng=rng, dp=None,
-            kd_lambda=kd_lambda,
-            pending={"agg_p": agg["p"], "agg_m": agg["m"],
-                     "snap_p": y_p, "snap_m": y_m})
-
-    @functools.cached_property
-    def _agg_fn(self):
-        return jax.jit(self._aggregate)
-
-    # ------------------------------------------------------------------
-    # int8 error-feedback compressed aggregation (beyond-paper)
-    # ------------------------------------------------------------------
-    def _step_compressed(self, state, u, a, rng, it_rng, use_kd,
-                         kd_lambda):
-        cfg = self.cfg
-        assert not cfg.use_dp, "compress + DP: quantize after noising TBD"
-        y_p, y_m, _ = self._it_fn(
-            state.params, state.momentum, None,
-            jnp.asarray(u), jnp.asarray(a), it_rng,
-            jnp.asarray(kd_lambda, jnp.float32),
-            use_kd=use_kd, use_dp=False, do_aggregate=False)
-        new_p, new_m, new_ref, new_err = self._compressed_agg_fn(
-            y_p, y_m, state.ref, state.ef_error, jnp.asarray(a))
-        from repro.core.compression import INT8_RATIO
-        self.comm_bytes += topology.iteration_bytes(
-            cfg.technique, int(a.sum()), self.model_bytes, self.plan,
-            num_rounds=cfg.mar_rounds) / INT8_RATIO
-        return FederationState(
-            params=new_p, momentum=new_m,
-            iteration=state.iteration + 1, rng=rng, dp=None,
-            kd_lambda=kd_lambda, ref=new_ref, ef_error=new_err)
-
-    @functools.cached_property
-    def _compressed_agg_fn(self):
-        from repro.core.compression import compressed_aggregate
-
-        def fn(params, momentum, ref, error, a_mask):
-            return compressed_aggregate(self._aggregate, params, momentum,
-                                        ref, error, a_mask)
-
-        return jax.jit(fn)
+                               pipe=pipe, kd_lambda=kd_lambda)
 
     def _kd_logit_bytes(self) -> int:
         # per teacher<->student exchange: logits on B local minibatches
@@ -380,14 +308,14 @@ class Federation:
         return float(self._eval_fn(p, self.test["x"], self.test["y"]))
 
     def peer_disagreement(self, state: FederationState) -> float:
-        """Mean squared distance of peers to the global mean (Eq. 1 LHS)."""
-        leaves = jax.tree.leaves(state.params)
+        """Per-parameter mean squared distance of peers to the global
+        mean (Eq. 1 LHS): sum_i ||theta_i - theta-bar||^2 / (N * P)."""
         total, count = 0.0, 0
-        for x in leaves:
+        for x in jax.tree.leaves(state.params):
             mean = jnp.mean(x, 0, keepdims=True)
             total += float(jnp.sum(jnp.square(x - mean)))
             count += x[0].size
-        return total / max(self.cfg.n_peers, 1)
+        return total / max(self.cfg.n_peers * count, 1)
 
 
 def run_federation(cfg: FederationConfig, iterations: int,

@@ -11,9 +11,13 @@ One FL iteration (Alg. 1, device form):
   1. ``local_steps`` Momentum-SGD steps per peer, each accumulating
      grads over ``n_micro`` microbatches (activation memory control).
      No cross-peer communication — only within-peer FSDP/TP collectives.
-  2. MAR aggregation of (theta, m): ``depth`` masked group-mean rounds
+  2. Aggregation of (theta, m) through the same composable
+     :class:`~repro.core.aggregation.AggregationPipeline` as the sim
+     backend: device-backed MAR — ``depth`` masked group-mean rounds
      over the peer grid (``one_shot=True`` fuses them into one global
-     all-reduce — beyond-paper variant).
+     all-reduce — beyond-paper variant) — optionally wrapped in wire
+     stages (int8-EF compression, ``comm_dtype``), with participation
+     masks for churn.
 
 Collective bytes per FL iteration drop by ``local_steps`` x versus
 per-step gradient DP — the paper's communication saving, realized on a
@@ -30,7 +34,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import mar_allreduce as mar
+from repro.core.aggregation import AggregationPipeline, MarAggregator
 from repro.core.moshpit import GridPlan
 from repro.models.model import Model
 from repro.optim.sgdm import momentum_sgd_step
@@ -39,16 +43,22 @@ Array = jax.Array
 PyTree = Any
 
 
-def init_fl_state(model: Model, n_peers: int, key: Array) -> Dict[str, Any]:
+def init_fl_state(model: Model, n_peers: int, key: Array,
+                  pipeline: Optional[AggregationPipeline] = None
+                  ) -> Dict[str, Any]:
     """Peer-stacked (params, momentum) — every peer starts from the same
-    theta^0 (Alg. 1)."""
+    theta^0 (Alg. 1). With a ``pipeline``, its wire-stage state (EF
+    residuals etc.) is initialized under ``"pipe"``."""
     params = model.init(key)
     stack = lambda x: jnp.broadcast_to(x[None], (n_peers,) + x.shape)
     params = jax.tree.map(stack, params)
     momentum = jax.tree.map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    return {"params": params, "momentum": momentum,
-            "step": jnp.zeros((), jnp.int32)}
+    state = {"params": params, "momentum": momentum,
+             "step": jnp.zeros((), jnp.int32)}
+    if pipeline is not None:
+        state["pipe"] = pipeline.init_state({"p": params, "m": momentum})
+    return state
 
 
 def fl_state_shape(model: Model, n_peers: int,
@@ -71,13 +81,29 @@ def fl_state_shape(model: Model, n_peers: int,
 def make_fl_train_step(model: Model, grid: GridPlan, lr: float = 0.1,
                        mu: float = 0.9, one_shot: bool = False,
                        aggregate: bool = True,
-                       comm_dtype: Optional[str] = None) -> Callable:
-    """Returns ``fl_train_step(state, batch) -> (state, metrics)``.
+                       comm_dtype: Optional[str] = None,
+                       pipeline: Optional[AggregationPipeline] = None
+                       ) -> Callable:
+    """Returns ``fl_train_step(state, batch, mask=None) -> (state,
+    metrics)``.
 
     batch: {"tokens": [P, B, n_micro, mb, s], "labels": ..., optional
     "prefix_embeds": ...} — P peers, B local steps, grad-accumulated
     microbatches.
+
+    ``pipeline`` runs the same composable aggregation as the sim backend
+    (device-backed MAR plus wire stages, e.g. ``int8_ef`` compression);
+    without one, a plain device-MAR pipeline is built from ``one_shot``
+    / ``comm_dtype``. ``mask`` ([P] 0/1 float) is a participation mask
+    with the paper's churn semantics: masked peers keep their previous
+    state, contribute nothing to their group means, but receive them.
+    When the pipeline carries wire-stage state, build the train state
+    with ``init_fl_state(..., pipeline=...)``.
     """
+    if pipeline is None and aggregate:
+        pipeline = AggregationPipeline(MarAggregator(
+            grid, backend="device", one_shot=one_shot,
+            comm_dtype=comm_dtype))
 
     def peer_local_update(params, momentum, peer_batch):
         """One peer: B sequential Momentum-SGD steps."""
@@ -104,18 +130,34 @@ def make_fl_train_step(model: Model, grid: GridPlan, lr: float = 0.1,
             one_step, (params, momentum), peer_batch)
         return params, momentum, jnp.mean(losses)
 
-    def fl_train_step(state, batch):
+    def fl_train_step(state, batch, mask=None):
         params, momentum = state["params"], state["momentum"]
         new_p, new_m, loss = jax.vmap(peer_local_update)(
             params, momentum, batch)
+        if mask is not None:
+            # churn: masked-out peers carry previous state forward
+            sel = lambda new, old: jax.tree.map(
+                lambda a, b: jnp.where(
+                    mask.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, a, b),
+                new, old)
+            new_p, new_m = sel(new_p, params), sel(new_m, momentum)
+        new_state = {"params": new_p, "momentum": new_m,
+                     "step": state["step"] + 1}
         if aggregate:
-            agg = mar.mar_aggregate_device(
-                {"p": new_p, "m": new_m}, grid, one_shot=one_shot,
-                comm_dtype=comm_dtype)
-            new_p, new_m = agg["p"], agg["m"]
+            if pipeline.stages and "pipe" not in state:
+                raise ValueError(
+                    "pipeline has wire stages; build the state with "
+                    "init_fl_state(..., pipeline=pipeline)")
+            m = (mask if mask is not None
+                 else jnp.ones((grid.capacity,), jnp.float32))
+            key = jax.random.fold_in(jax.random.PRNGKey(0), state["step"])
+            agg, new_pipe = pipeline({"p": new_p, "m": new_m},
+                                     state.get("pipe", {}), m, key)
+            new_state["params"], new_state["momentum"] = agg["p"], agg["m"]
+            if "pipe" in state:
+                new_state["pipe"] = new_pipe
         metrics = {"loss": jnp.mean(loss)}
-        return {"params": new_p, "momentum": new_m,
-                "step": state["step"] + 1}, metrics
+        return new_state, metrics
 
     return fl_train_step
 

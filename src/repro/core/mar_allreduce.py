@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.aggregation import finalize_masked_mean
 from repro.core.moshpit import GridPlan
 
 Array = jax.Array
@@ -55,10 +56,8 @@ def _segment_mean(x: Array, seg_ids: Array, num_groups: int,
     cnts = jax.ops.segment_sum(mask.astype(jnp.float32), seg_ids,
                                num_segments=num_groups)
     cnt_per_peer = cnts[seg_ids].reshape(mshape)
-    mean = sums[seg_ids] / jnp.maximum(cnt_per_peer, 1.0)
-    keep_own = (cnt_per_peer == 0).astype(jnp.float32)
-    return (mean * (1.0 - keep_own)
-            + x.astype(jnp.float32) * keep_own).astype(x.dtype)
+    return finalize_masked_mean(sums[seg_ids], cnt_per_peer,
+                                x).astype(x.dtype)
 
 
 def mar_round_sim(state: PyTree, plan: GridPlan, rnd: int,
@@ -136,9 +135,7 @@ def _grid_reshape_mean(x: Array, dims: Sequence[int], axis: int,
     num = jnp.sum(xg.astype(acc_dt) * mg.astype(acc_dt), axis=axis,
                   keepdims=True).astype(jnp.float32)
     den = jnp.sum(mg.astype(jnp.float32), axis=axis, keepdims=True)
-    mean = num / jnp.maximum(den, 1.0)
-    empty = (den == 0).astype(jnp.float32)
-    out = mean * (1.0 - empty) + xg.astype(jnp.float32) * empty
+    out = finalize_masked_mean(num, den, xg)
     out = jnp.broadcast_to(out, grid + x.shape[1:])
     # broadcast after keepdims-mean: group members all receive the mean
     return out.astype(x.dtype).reshape((lead,) + x.shape[1:])
@@ -185,14 +182,53 @@ def mar_aggregate_device(state: PyTree, plan: GridPlan,
             m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
             num = jnp.sum(x.astype(acc_dt) * m.astype(acc_dt), axis=0,
                           keepdims=True).astype(jnp.float32)
-            den = jnp.maximum(jnp.sum(m.astype(jnp.float32), axis=0,
-                                      keepdims=True), 1.0)
-            return jnp.broadcast_to(num / den, x.shape).astype(x.dtype)
+            den = jnp.sum(m.astype(jnp.float32), axis=0, keepdims=True)
+            return finalize_masked_mean(num, den, x).astype(x.dtype)
 
         return jax.tree.map(leaf, state)
     for g in range(plan.depth):
         state = mar_round_device(state, plan, g, mask, comm_dtype)
     return state
+
+
+# ---------------------------------------------------------------------------
+# gossip (push-sum) — sim backend
+# ---------------------------------------------------------------------------
+
+def gossip_aggregate_sim(state: PyTree, mask: Optional[Array] = None,
+                         rounds: Optional[int] = None) -> PyTree:
+    """Push-sum ring gossip with doubling shifts (beyond-paper).
+
+    In round ``r`` every peer averages its (value, weight) pair with the
+    peer ``2^r`` positions behind it on a fixed ring; after
+    ``ceil(log2 N)`` rounds (the default) each peer's window covers the
+    whole ring. For power-of-two N under full participation this is the
+    exact global mean; otherwise overlapping windows double-count some
+    peers and the push-sum weights turn the result into a consistent
+    weighted approximation. A peer whose whole window dropped keeps its
+    own state (same churn semantics as MAR). Cost model: one model per
+    peer per round — ``topology.py``.
+    """
+    leaves = jax.tree.leaves(state)
+    n = leaves[0].shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    if rounds is None:
+        rounds = max(1, int(np.ceil(np.log2(max(n, 2)))))
+
+    w = mask.astype(jnp.float32)
+    for r in range(rounds):
+        w = 0.5 * (w + jnp.roll(w, 1 << r, axis=0))
+
+    def leaf(x):
+        mshape = (-1,) + (1,) * (x.ndim - 1)
+        num = x.astype(jnp.float32) * mask.reshape(mshape)
+        for r in range(rounds):
+            num = 0.5 * (num + jnp.roll(num, 1 << r, axis=0))
+        return finalize_masked_mean(num, w.reshape(mshape), x,
+                                    floor=1e-12).astype(x.dtype)
+
+    return jax.tree.map(leaf, state)
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,11 @@ state of ``model_bytes`` (theta + momentum, both averaged by Alg. 1):
 * ``mar``    — G rounds, group size M, naive within-group exchange
                (each peer sends its state to M-1 group mates):
                ``n G (M-1) B``                                  (O(N log N))
+* ``gossip`` — push-sum ring, one partner per round over
+               ceil(log2 n) rounds: ``n ceil(log2 n) B``        (O(N log N))
+* ``hierarchical`` — two-tier FedAvg over the leaf MAR groups
+               (peers <-> group leader, leaders <-> rendezvous):
+               ``2 (n + ceil(n/M)) B``                          (O(N))
 
 The MAR constant reproduces the paper's headline numbers: at N=125
 (M=5, G=3): 125*3*4 = 1500 model-units vs AR's 125*124 = 15500 — the
@@ -76,6 +81,14 @@ def iteration_bytes(technique: str, n: int, model_bytes: int,
     elif technique == "mar":
         assert plan is not None
         data = mar_bytes(n, plan, model_bytes, num_rounds, mode)
+    elif technique == "gossip":
+        rounds = (num_rounds if num_rounds is not None
+                  else max(1, math.ceil(math.log2(max(n, 2)))))
+        data = rounds * n * model_bytes
+    elif technique == "hierarchical":
+        assert plan is not None
+        n_groups = max(1, math.ceil(n / plan.dims[-1]))
+        data = 2 * (n + n_groups) * model_bytes
     else:
         raise ValueError(technique)
     if use_kd and technique == "mar":
@@ -98,6 +111,11 @@ def iteration_latency_rounds(technique: str, n: int,
         return max(n - 1, 1)          # ring circulation
     if technique == "mar":
         return plan.depth if num_rounds is None else num_rounds
+    if technique == "gossip":
+        return (num_rounds if num_rounds is not None
+                else max(1, math.ceil(math.log2(max(n, 2)))))
+    if technique == "hierarchical":
+        return 4                      # up/down within groups, up/down leaders
     raise ValueError(technique)
 
 
@@ -113,7 +131,8 @@ def complexity_table(model_bytes: int, peer_counts=(16, 64, 125, 512, 4096)
     rows = []
     for n in peer_counts:
         plan = plan_grid(n)
-        for tech in ("fedavg", "mar", "rdfl", "ar"):
+        for tech in ("fedavg", "hierarchical", "mar", "gossip", "rdfl",
+                     "ar"):
             rows.append(dict(
                 technique=tech, n_peers=n,
                 bytes=iteration_bytes(tech, n, model_bytes, plan),

@@ -23,6 +23,8 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.core import topology
+from repro.core.aggregation import CommLedger, build_pipeline
 from repro.core.fl_device import init_fl_state, make_fl_train_step
 from repro.core.moshpit import plan_grid
 from repro.data.synthetic import lm_token_stream
@@ -43,6 +45,14 @@ def main(argv=None) -> int:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--one-shot", action="store_true")
+    ap.add_argument("--compress", choices=["int8_ef"], default=None,
+                    help="int8 error-feedback delta compression on the "
+                         "aggregation wire")
+    ap.add_argument("--comm-dtype", default=None,
+                    help="wire dtype of the cross-peer reduce "
+                         "(e.g. bfloat16)")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="per-step peer participation rate (churn mask)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
@@ -57,10 +67,21 @@ def main(argv=None) -> int:
     print(f"[train] arch={cfg.name} peers={args.peers} "
           f"grid={grid.dims} params={cfg.param_count():,}")
 
+    pipeline = build_pipeline("mar", grid, backend="device",
+                              one_shot=args.one_shot,
+                              comm_dtype=args.comm_dtype,
+                              compress=args.compress)
+    if pipeline.stage_names:
+        print(f"[train] wire stages: {', '.join(pipeline.stage_names)}")
     step_fn = jax.jit(make_fl_train_step(
-        model, grid, lr=args.lr, one_shot=args.one_shot))
+        model, grid, lr=args.lr, pipeline=pipeline))
 
-    state = init_fl_state(model, args.peers, jax.random.PRNGKey(args.seed))
+    state = init_fl_state(model, args.peers, jax.random.PRNGKey(args.seed),
+                          pipeline=pipeline)
+    ledger = CommLedger()
+    peer_model_bytes = (topology.pytree_bytes(state["params"])
+                        + topology.pytree_bytes(state["momentum"])
+                        ) // args.peers
     start = 0
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
     if ckpt and args.resume and ckpt.latest_step() is not None:
@@ -74,6 +95,7 @@ def main(argv=None) -> int:
     health = HealthTracker(args.peers)
     straggler = StragglerPolicy()
     metrics_log = MetricsLogger(args.metrics)
+    mask_rng = np.random.default_rng(args.seed + 999)
 
     for t in range(start, start + args.steps):
         raw = next(stream)
@@ -82,9 +104,20 @@ def main(argv=None) -> int:
                          args.seq)
             for k, v in raw.items()
         }
+        if args.participation < 1.0:
+            u = mask_rng.random(args.peers) < args.participation
+            if not u.any():
+                u[mask_rng.integers(args.peers)] = True
+        else:
+            u = np.ones(args.peers, bool)
         t0 = time.time()
-        state, metrics = step_fn(state, batch)
+        if args.participation < 1.0:
+            state, metrics = step_fn(state, batch,
+                                     jnp.asarray(u, jnp.float32))
+        else:
+            state, metrics = step_fn(state, batch)
         dt = time.time() - t0
+        pipeline.record_iteration(ledger, int(u.sum()), peer_model_bytes)
         for p in range(args.peers):
             health.heartbeat(p, dt)
         metrics_log.log(t + 1, tokens=args.peers * args.local_steps
@@ -107,6 +140,9 @@ def main(argv=None) -> int:
                             "arch": cfg.name})
         ckpt.wait()
         print(f"[train] checkpointed at {start + args.steps}")
+    per_source = " ".join(f"{k}={v/1e6:.1f}MB"
+                          for k, v in ledger.by_source.items())
+    print(f"[train] comm total={ledger.total_bytes/1e6:.1f}MB {per_source}")
     return 0
 
 

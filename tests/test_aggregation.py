@@ -1,0 +1,377 @@
+"""Composable aggregation pipeline: registry, wire-stage parity,
+CommLedger regression against the analytic topology models, and
+sim/device backend parity under masks + compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mar_allreduce as mar
+from repro.core import topology
+from repro.core.aggregation import (AGGREGATORS, TECHNIQUES,
+                                    AggregationPipeline, AsyncStage,
+                                    CommLedger, DPStage, Int8EFStage,
+                                    MarAggregator, build_pipeline,
+                                    finalize_masked_mean, make_aggregator)
+from repro.core.federation import Federation, FederationConfig
+from repro.core.moshpit import GridPlan, plan_grid
+
+
+def _state(n, dim=7, seed=0):
+    x = np.random.default_rng(seed).normal(size=(n, dim)).astype(np.float32)
+    return {"p": jnp.asarray(x), "m": jnp.asarray(0.1 * x)}
+
+
+# ---------------------------------------------------------------------------
+# strategy layer: registry
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert {"mar", "fedavg", "ar", "rdfl", "gossip",
+            "hierarchical"} <= set(AGGREGATORS)
+    assert TECHNIQUES == tuple(AGGREGATORS)
+
+
+def test_make_aggregator_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_aggregator("carrier-pigeon", plan_grid(8))
+
+
+def test_device_backend_gated_to_supported():
+    with pytest.raises(ValueError):
+        make_aggregator("gossip", plan_grid(8), backend="device")
+    agg = make_aggregator("mar", plan_grid(16), backend="device")
+    assert agg.backend == "device"
+
+
+def test_exact_mean_family_agrees_under_churn():
+    """The global-mean family returns the same masked global mean (MAR
+    is only exact under full participation, so it is tested below)."""
+    p = plan_grid(16)
+    s = _state(16)
+    mask = jnp.asarray(np.random.default_rng(1).integers(0, 2, 16),
+                       jnp.float32).at[0].set(1.0)
+    want = make_aggregator("ar", p)(s, mask)["p"]
+    for name in ("fedavg", "rdfl", "hierarchical"):
+        got = make_aggregator(name, p)(s, mask)["p"]
+        np.testing.assert_allclose(got, want, atol=1e-5, err_msg=name)
+
+
+def test_all_techniques_exact_under_full_participation():
+    p = plan_grid(16)
+    s = _state(16)
+    mask = jnp.ones((16,), jnp.float32)
+    gm = jnp.mean(s["p"], 0, keepdims=True)
+    for name in TECHNIQUES:
+        got = make_aggregator(name, p)(s, mask)["p"]
+        np.testing.assert_allclose(got, jnp.broadcast_to(gm, got.shape),
+                                   atol=1e-5, err_msg=name)
+
+
+def test_gossip_exact_for_power_of_two():
+    s = _state(16)
+    out = mar.gossip_aggregate_sim(s)
+    gm = jnp.mean(s["p"], 0, keepdims=True)
+    np.testing.assert_allclose(out["p"], jnp.broadcast_to(gm, (16, 7)),
+                               atol=1e-5)
+
+
+@given(st.integers(3, 30), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_gossip_masked_convexity(n, seed):
+    """Push-sum gossip outputs stay inside the input hull (any N)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 3)).astype(np.float32)
+    mask = (rng.random(n) < 0.7).astype(np.float32)
+    out = mar.gossip_aggregate_sim({"p": jnp.asarray(x)},
+                                   jnp.asarray(mask))["p"]
+    assert float(jnp.max(out)) <= x.max() + 1e-4
+    assert float(jnp.min(out)) >= x.min() - 1e-4
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_finalize_masked_mean_empty_group_keeps_own():
+    num = jnp.zeros((4, 2))
+    den = jnp.asarray([0.0, 2.0, 0.0, 1.0]).reshape(-1, 1)
+    own = jnp.arange(8.0).reshape(4, 2)
+    out = finalize_masked_mean(num, den, own)
+    np.testing.assert_allclose(out[0], own[0])
+    np.testing.assert_allclose(out[2], own[2])
+    np.testing.assert_allclose(out[1], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# wire-stage layer: composition parity under full participation
+# ---------------------------------------------------------------------------
+
+def _run_pipeline_twice(pipeline, s):
+    """Apply a (possibly stateful/delayed) pipeline twice on a static
+    state; the second output has absorbed any staleness-1 delay."""
+    n = s["p"].shape[0]
+    mask = jnp.ones((n,), jnp.float32)
+    pipe = pipeline.init_state(jax.tree.map(jnp.zeros_like, s))
+    out, pipe = pipeline(s, pipe, mask, jax.random.PRNGKey(0))
+    out, pipe = pipeline(s, pipe, mask, jax.random.PRNGKey(1))
+    return out
+
+
+@pytest.mark.parametrize("stages", [
+    ("int8_ef",), ("async",), ("async", "int8_ef")])
+def test_stage_composition_matches_plain(stages):
+    """Each wire-stage composition matches the plain aggregator within
+    tolerance under full participation (quantization error bounded by
+    the int8 grid; staleness absorbed by a repeated static state)."""
+    p = plan_grid(16)
+    s = _state(16, seed=2)
+    plain = MarAggregator(p)(s, jnp.ones((16,), jnp.float32))
+    mk = {"int8_ef": Int8EFStage, "async": AsyncStage}
+    pipeline = AggregationPipeline(MarAggregator(p),
+                                   [mk[name]() for name in stages])
+    out = _run_pipeline_twice(pipeline, s)
+    atol = 0.05 if "int8_ef" in stages else 1e-5
+    np.testing.assert_allclose(out["p"], plain["p"], atol=atol)
+    np.testing.assert_allclose(out["m"], plain["m"], atol=1e-5)
+
+
+def test_dp_stage_threads_state_and_strips_extras():
+    p = plan_grid(8)
+    s = _state(8, seed=3)
+    pipeline = AggregationPipeline(
+        MarAggregator(p), [DPStage(p, noise_multiplier=0.3)])
+    pipe = pipeline.init_state(s)
+    clip0 = float(pipe["dp"]["clip"])
+    out, pipe = pipeline(s, pipe, jnp.ones((8,), jnp.float32),
+                         jax.random.PRNGKey(0))
+    assert set(out) == {"p", "m"}
+    assert float(pipe["dp"]["clip"]) != clip0
+    for leaf in jax.tree.leaves(out):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_duplicate_stages_rejected():
+    with pytest.raises(ValueError):
+        AggregationPipeline(MarAggregator(plan_grid(8)),
+                            [Int8EFStage(), Int8EFStage()])
+
+
+# ---------------------------------------------------------------------------
+# previously-asserted-out combinations converge (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def _accuracy(cfg, iters=20):
+    fed = Federation(cfg)
+    state = fed.init_state()
+    for _ in range(iters):
+        state = fed.step(state)
+    return fed.evaluate(state)
+
+
+@pytest.mark.slow
+def test_compress_dp_composes_and_converges():
+    """compress + DP (quantize-after-noising) stays within 2 points of
+    the uncompressed DP run in a 20-iteration smoke test."""
+    base = dict(n_peers=8, technique="mar", task="text", local_batches=4,
+                use_dp=True, noise_multiplier=0.3, seed=3)
+    acc_dp = _accuracy(FederationConfig(**base))
+    acc_both = _accuracy(FederationConfig(**base, compress="int8_ef"))
+    assert acc_both >= acc_dp - 0.02
+
+
+@pytest.mark.slow
+def test_async_compress_composes_and_converges():
+    base = dict(n_peers=8, technique="mar", task="text", local_batches=4,
+                async_aggregation=True, seed=3)
+    acc_async = _accuracy(FederationConfig(**base))
+    acc_both = _accuracy(FederationConfig(**base, compress="int8_ef"))
+    assert acc_both >= acc_async - 0.02
+
+
+# ---------------------------------------------------------------------------
+# accounting layer: CommLedger vs analytic topology models
+# ---------------------------------------------------------------------------
+
+def test_ledger_basic_bookkeeping():
+    led = CommLedger()
+    led.record("a", 10)
+    led.record("a", 5)
+    led.record("b", 1)
+    assert led.total_bytes == 16
+    assert led.by_source == {"a": 15.0, "b": 1.0}
+    led.reset()
+    assert led.total_bytes == 0 and led.by_source == {}
+
+
+@pytest.mark.parametrize("tech", ["mar", "fedavg", "ar", "rdfl", "gossip",
+                                  "hierarchical"])
+def test_ledger_matches_analytic_on_legacy_paths(tech):
+    """Regression (acceptance): reported comm bytes come from the
+    CommLedger and equal topology.iteration_bytes on legacy paths."""
+    cfg = FederationConfig(n_peers=8, technique=tech, task="text", seed=1)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    for _ in range(3):
+        state = fed.step(state)
+    analytic = 3 * topology.iteration_bytes(tech, 8, fed.model_bytes,
+                                            fed.plan)
+    assert fed.comm_bytes == pytest.approx(analytic)
+    assert sum(fed.ledger.by_source.values()) == pytest.approx(analytic)
+
+
+def test_ledger_async_kd_regression():
+    """Regression for the seed bug: _step_async dropped use_kd /
+    kd_logit_bytes from its accounting, undercounting KD iterations.
+    The CommLedger path must charge async+KD exactly like sync+KD."""
+    kw = dict(n_peers=8, technique="mar", task="text", use_kd=True,
+              kd_iterations=2, seed=5)
+    comms = {}
+    for mode in (False, True):
+        cfg = FederationConfig(**kw, async_aggregation=mode)
+        fed = Federation(cfg)
+        state = fed.init_state()
+        for _ in range(3):          # 2 KD iterations + 1 plain
+            state = fed.step(state)
+        comms[mode] = fed.comm_bytes
+        analytic = (
+            2 * topology.iteration_bytes(
+                "mar", 8, fed.model_bytes, fed.plan, use_kd=True,
+                kd_logit_bytes=fed._kd_logit_bytes())
+            + topology.iteration_bytes("mar", 8, fed.model_bytes,
+                                       fed.plan))
+        assert fed.comm_bytes == pytest.approx(analytic)
+        assert fed.ledger.by_source["kd"] > 0
+    assert comms[True] == pytest.approx(comms[False])
+
+
+def test_gossip_ledger_rounds_independent_of_churn():
+    """Regression: gossip's ring covers all N peers regardless of how
+    many participate, so the byte model must use ceil(log2 N) rounds —
+    not a round count derived from the (smaller) active set."""
+    cfg = FederationConfig(n_peers=16, technique="gossip", task="text",
+                           participation_rate=0.5, seed=2)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    state = fed.step(state)
+    u, a = fed.sample_masks(
+        np.random.default_rng(cfg.seed * 100003 + 0))
+    n_active = int(a.sum())
+    assert n_active < 16                 # churn actually happened
+    analytic = topology.iteration_bytes(
+        "gossip", n_active, fed.model_bytes, fed.plan, num_rounds=4)
+    assert fed.comm_bytes == pytest.approx(analytic)
+
+
+def test_one_shot_all_dropped_keeps_state():
+    """Regression: the fused one-shot device mean shares the
+    finalize_masked_mean churn fallback — an all-dropped aggregation
+    carries peer state forward instead of zeroing it."""
+    p = GridPlan(4, (2, 2))
+    s = _state(4, seed=7)
+    out = mar.mar_aggregate_device(s, p, jnp.zeros((4,), jnp.float32),
+                                   one_shot=True)
+    np.testing.assert_allclose(out["p"], s["p"], atol=1e-6)
+    np.testing.assert_allclose(out["m"], s["m"], atol=1e-6)
+
+
+def test_ledger_compression_ratio():
+    from repro.core.compression import INT8_RATIO
+    p = plan_grid(16)
+    plain = AggregationPipeline(MarAggregator(p))
+    comp = AggregationPipeline(MarAggregator(p), [Int8EFStage()])
+    assert comp.iteration_bytes(16, 1000) == pytest.approx(
+        plain.iteration_bytes(16, 1000) / INT8_RATIO)
+
+
+# ---------------------------------------------------------------------------
+# execution layer: sim/device parity under masks + compression
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 4), st.integers(1, 3), st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_device_sim_parity_under_masks(m, d, seed):
+    """Acceptance: the device backend accepts a participation mask and
+    matches the sim backend on the same grid."""
+    n = m ** d
+    p = GridPlan(n, (m,) * d)
+    rng = np.random.default_rng(seed)
+    s = {"p": jnp.asarray(rng.normal(size=(n, 5)), jnp.float32),
+         "m": jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)}
+    mask = (rng.random(n) < 0.7).astype(np.float32)
+    if mask.sum() == 0:
+        mask[0] = 1.0
+    mask = jnp.asarray(mask)
+    sim = MarAggregator(p, backend="sim")(s, mask)
+    dev = MarAggregator(p, backend="device")(s, mask)
+    np.testing.assert_allclose(sim["p"], dev["p"], atol=1e-5)
+    np.testing.assert_allclose(sim["m"], dev["m"], atol=1e-5)
+
+
+def test_device_sim_parity_with_compression():
+    p = GridPlan(16, (4, 4))
+    s = _state(16, seed=4)
+    mask = jnp.asarray(np.random.default_rng(4).random(16) < 0.8,
+                       jnp.float32).at[0].set(1.0)
+    outs = {}
+    for backend in ("sim", "device"):
+        pipeline = AggregationPipeline(
+            MarAggregator(p, backend=backend), [Int8EFStage()])
+        pipe = pipeline.init_state(jax.tree.map(jnp.zeros_like, s))
+        outs[backend], _ = pipeline(s, pipe, mask, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(outs["sim"]["p"], outs["device"]["p"],
+                               atol=1e-5)
+
+
+class _ToyModel:
+    """Duck-typed stand-in for models.model.Model: linear regression."""
+
+    def __init__(self, dim=3):
+        self.dim = dim
+
+    def init(self, key):
+        return {"w": jax.random.normal(key, (self.dim,), jnp.float32)}
+
+    def loss(self, params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean(jnp.square(pred - batch["y"]))
+
+
+def test_fl_train_step_mask_and_compression():
+    """Acceptance: make_fl_train_step accepts a participation mask and
+    compress="int8_ef"; masked-out peers carry state forward."""
+    from repro.core.fl_device import init_fl_state, make_fl_train_step
+    model = _ToyModel()
+    grid = GridPlan(4, (2, 2))
+    pipeline = build_pipeline("mar", grid, backend="device",
+                              compress="int8_ef")
+    state = init_fl_state(model, 4, jax.random.PRNGKey(0),
+                          pipeline=pipeline)
+    assert "pipe" in state and "int8_ef" in state["pipe"]
+    step = make_fl_train_step(model, grid, lr=0.05, pipeline=pipeline)
+    rng = np.random.default_rng(0)
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(4, 2, 1, 8, 3)), jnp.float32),
+        "y": jnp.asarray(rng.normal(size=(4, 2, 1, 8)), jnp.float32),
+    }
+    mask = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    state1, metrics = step(state, batch, mask)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # masked-out peer contributed nothing, but received its group mean
+    assert int(state1["step"]) == 1
+    for leaf in jax.tree.leaves(state1["params"]):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    # second step exercises the carried EF residual structure
+    state2, _ = step(state1, batch, mask)
+    assert int(state2["step"]) == 2
+
+
+def test_fl_train_step_requires_pipe_state_for_stages():
+    from repro.core.fl_device import init_fl_state, make_fl_train_step
+    model = _ToyModel()
+    grid = GridPlan(4, (2, 2))
+    pipeline = build_pipeline("mar", grid, backend="device",
+                              compress="int8_ef")
+    state = init_fl_state(model, 4, jax.random.PRNGKey(0))  # no pipe
+    step = make_fl_train_step(model, grid, pipeline=pipeline)
+    batch = {"x": jnp.zeros((4, 1, 1, 2, 3)), "y": jnp.zeros((4, 1, 1, 2))}
+    with pytest.raises(ValueError):
+        step(state, batch)

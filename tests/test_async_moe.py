@@ -40,13 +40,19 @@ def test_async_comm_bytes_match_sync():
     assert comms[0] == comms[1]      # same bytes, different schedule
 
 
-def test_async_dp_rejected():
+def test_async_dp_composes():
+    """async + DP — asserted out before the composable pipeline — now
+    runs: the staleness-1 schedule wraps the privatized aggregation."""
     cfg = FederationConfig(n_peers=8, use_dp=True, async_aggregation=True,
-                           task="text")
+                           task="text", seed=4)
     fed = Federation(cfg)
+    assert fed.pipeline.stage_names == ("async", "dp")
     state = fed.init_state()
-    with pytest.raises(AssertionError):
-        fed.step(state)
+    for _ in range(3):
+        state = fed.step(state)
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    assert state.dp is not None and state.pending is not None
 
 
 # ---------------------------------------------------------------------------

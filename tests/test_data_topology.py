@@ -103,5 +103,6 @@ def test_control_plane_negligible():
 
 def test_complexity_table_shape():
     rows = topology.complexity_table(1000, peer_counts=(16, 64))
-    assert len(rows) == 8
-    assert {r["technique"] for r in rows} == {"fedavg", "mar", "rdfl", "ar"}
+    techs = {"fedavg", "hierarchical", "mar", "gossip", "rdfl", "ar"}
+    assert len(rows) == 2 * len(techs)
+    assert {r["technique"] for r in rows} == techs

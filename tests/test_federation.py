@@ -92,8 +92,43 @@ def test_paper_headline_10x_at_125():
 
 
 def test_unknown_technique_rejected():
+    # "gossip" graduated into the aggregator registry; use a name that
+    # stays fictional
     with pytest.raises(ValueError):
-        Federation(FederationConfig(technique="gossip"))
+        Federation(FederationConfig(technique="carrier-pigeon"))
+
+
+def test_new_techniques_reach_global_mean():
+    """Registry additions: gossip (power-of-two ring) and hierarchical
+    match the exact-mean family under full participation."""
+    results = {}
+    for tech in ("mar", "gossip", "hierarchical"):
+        cfg = FederationConfig(n_peers=8, technique=tech, task="text",
+                               seed=3)
+        fed, state = _run(cfg, 4)
+        results[tech] = jax.tree.leaves(state.params)[0]
+    np.testing.assert_allclose(results["gossip"], results["mar"], atol=1e-5)
+    np.testing.assert_allclose(results["hierarchical"], results["mar"],
+                               atol=1e-5)
+
+
+def test_peer_disagreement_is_per_parameter_mean():
+    """Regression: the normalization is N * total-params (the docstring's
+    per-parameter mean), so hand-planted spread gives an exact value."""
+    cfg = FederationConfig(n_peers=4, technique="mar", task="text")
+    fed = Federation(cfg)
+    state = fed.init_state()
+    # peers at +delta/-delta around their mean in every coordinate
+    delta = 0.5
+    state.params = jax.tree.map(
+        lambda x: jnp.where(
+            (jnp.arange(x.shape[0]) % 2 == 0).reshape(
+                (-1,) + (1,) * (x.ndim - 1)),
+            jnp.full_like(x, delta), jnp.full_like(x, -delta)),
+        state.params)
+    # every parameter contributes delta^2 to the squared distance
+    assert fed.peer_disagreement(state) == pytest.approx(delta ** 2,
+                                                         rel=1e-5)
 
 
 def test_rng_reproducibility():

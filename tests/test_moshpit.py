@@ -80,6 +80,62 @@ def test_mesh_grid_plan():
     assert mesh_grid_plan([2]).dims == (2,)
 
 
+def test_mesh_grid_plan_factor_hints():
+    """factor_hints override the balanced factorization per DP axis."""
+    assert mesh_grid_plan([16], {0: (2, 8)}).dims == (2, 8)
+    assert mesh_grid_plan([16], {0: (2, 2, 2, 2)}).dims == (2, 2, 2, 2)
+    # hint on one axis leaves the others balanced
+    p = mesh_grid_plan([2, 16], {1: (8, 2)})
+    assert p.dims == (2, 8, 2)
+    assert p.capacity == 32 and p.n_peers == 32
+    # a hint that doesn't multiply out to the axis size is rejected
+    with pytest.raises(AssertionError):
+        mesh_grid_plan([16], {0: (3, 5)})
+
+
+def test_mesh_grid_plan_hinted_plans_stay_exact():
+    for hints in (None, {0: (2, 8)}, {0: (4, 4)}):
+        p = mesh_grid_plan([16], hints)
+        assert p.is_exact
+        for rnd in range(p.depth):
+            groups = p.groups_for_round(rnd)
+            flat = np.sort(np.concatenate(groups))
+            assert np.array_equal(flat, np.arange(p.capacity))
+
+
+def test_partner_matrix_ordered_by_struck_coordinate():
+    """partner_matrix row k holds the group mate whose struck-out
+    coordinate equals k (the ordering secagg's pairwise masks rely on)."""
+    p = GridPlan(24, (2, 3, 4))
+    for rnd in range(p.depth):
+        pm = p.partner_matrix(rnd)
+        assert pm.shape == (24, p.dims[rnd])
+        c = p.coords(np.arange(24))
+        for peer in range(24):
+            for k in range(p.dims[rnd]):
+                cc = p.coords(pm[peer, k])
+                assert cc[rnd] == k
+                struck = np.delete(cc, rnd)
+                assert np.array_equal(struck, np.delete(c[peer], rnd))
+        # the diagonal: every peer appears in its own row at its own
+        # struck coordinate
+        own = pm[np.arange(24), c[:, rnd]]
+        assert np.array_equal(own, np.arange(24))
+
+
+@given(st.integers(2, 5), st.integers(1, 3))
+@settings(max_examples=20, deadline=None)
+def test_partner_matrix_rows_are_groups(m, d):
+    p = GridPlan(m ** d, (m,) * d)
+    for rnd in range(d):
+        pm = p.partner_matrix(rnd)
+        keys = p.group_key(np.arange(p.capacity), rnd)
+        # every row is exactly its peer's group (same key, all members)
+        for peer in range(p.capacity):
+            assert len(set(pm[peer])) == m
+            assert np.all(keys[pm[peer]] == keys[peer])
+
+
 def test_exchange_and_byte_counts():
     p = GridPlan(125, (5, 5, 5))
     assert exchanges_per_iteration(p) == 125 * 3 * 4
