@@ -24,12 +24,16 @@ def std_argparser(desc: str) -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=desc)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale settings (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal settings (CI smoke jobs)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
 
-def scale(full: bool) -> Dict[str, int]:
+def scale(full: bool, smoke: bool = False) -> Dict[str, int]:
     """(peers, iterations, eval_every) per mode."""
+    if smoke:
+        return dict(peers=8, iters=6, eval_every=3, local_batches=1)
     if full:
         return dict(peers=125, iters=150, eval_every=5, local_batches=1)
     return dict(peers=27, iters=30, eval_every=5, local_batches=2)

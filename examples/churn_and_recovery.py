@@ -1,6 +1,12 @@
-"""Churn + fault tolerance: peers drop mid-training, a straggler gets
-masked, the federation checkpoints and restarts with a different peer
-count (elastic re-mesh).
+"""Churn + fault tolerance on the peer lifecycle runtime.
+
+A 16-peer federation trains through session churn (Markov on/off
+availability), correlated region outages, and deadline stragglers; a
+silent peer is caught by the HealthTracker sweep; then the fleet
+permanently shrinks 16 -> 9 and grows back 9 -> 12 *mid-run* — elastic
+regrouping via ``Federation.resize`` (grid re-factorized, pipeline
+rebuilt, peer state resized in place), no checkpoint/restart round-trip.
+The whole membership history is saved as a replayable trace.
 
     PYTHONPATH=src python examples/churn_and_recovery.py
 """
@@ -9,51 +15,58 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.federation import Federation, FederationConfig
 from repro.runtime.fault import (HealthTracker, StragglerPolicy,
-                                 elastic_replan, failure_impact)
+                                 failure_impact)
+from repro.runtime.lifecycle import (PeerLifecycle, build_churn_model,
+                                     build_lifecycle, load_trace,
+                                     save_trace)
 
+# --- phase 1: session churn + health tracking --------------------------
 cfg = FederationConfig(n_peers=16, technique="mar", task="text",
-                       dropout_rate=0.2, local_batches=2)
-fed = Federation(cfg)
+                       churn="sessions",
+                       churn_params={"mean_up": 6.0, "mean_down": 2.0},
+                       local_batches=2, seed=0)
+lifecycle = PeerLifecycle(
+    build_churn_model("sessions", 16, seed=0, mean_up=6.0, mean_down=2.0),
+    health=HealthTracker(16, timeout_s=4.0),     # 4 iterations silent
+    straggler=StragglerPolicy(k_std=2.0))
+fed = Federation(cfg, lifecycle=lifecycle)
 state = fed.init_state()
-health = HealthTracker(cfg.n_peers, timeout_s=5.0)
-straggler = StragglerPolicy(k_std=2.0)
 
-print(f"grid={fed.plan.dims}; simulated 20% dropout per iteration")
-print("failure impact of peers {3, 7}:",
-      failure_impact(fed.plan, [3, 7]))
+print(f"grid={fed.plan.dims}; session churn "
+      f"(mean_up=6 it, mean_down=2 it)")
+print("failure impact of peers {3, 7}:", failure_impact(fed.plan, [3, 7]))
 
 for t in range(10):
-    # fleet health -> participation mask (dead peers excluded from MAR)
-    durations = np.abs(np.random.default_rng(t).normal(1.0, 0.1, 16))
     if t == 4:
-        durations[5] = 9.0          # straggler at iteration 4
-        health.mark_failed(11)      # hard failure at iteration 4
-    u = health.alive_mask() * straggler.mask(durations)
-    a = u.copy()
-    state = fed.step(state, masks=(u, a))
-print(f"after churn: acc={fed.evaluate(state):.3f}")
+        lifecycle.health.mark_failed(11)   # hard failure at iteration 4
+    state = fed.step(state)
+print(f"after churn: acc={fed.evaluate(state):.3f}, "
+      f"{len(lifecycle.event_log)} membership events")
 
-# checkpoint, then restart ELASTICALLY with 9 peers (16 -> 9)
+# --- phase 2: mid-run elastic shrink 16 -> 9 ---------------------------
+state = fed.resize(state, 9)
+print(f"elastic shrink 16->9 (no restart): grid={fed.plan.dims}, "
+      f"impact of peer 3 now {failure_impact(fed.plan, [3])}")
+for _ in range(5):
+    state = fed.step(state)
+print(f"resumed with 9 peers: acc={fed.evaluate(state):.3f}")
+
+# --- phase 3: mid-run elastic grow 9 -> 12 -----------------------------
+state = fed.resize(state, 12)
+print(f"elastic grow 9->12: grid={fed.plan.dims} "
+      f"(capacity {fed.plan.capacity}, virtual slots masked)")
+for _ in range(5):
+    state = fed.step(state)
+print(f"resumed with 12 peers: acc={fed.evaluate(state):.3f}")
+
+# --- phase 4: the membership history is a replayable trace -------------
 with tempfile.TemporaryDirectory() as d:
-    ck = Checkpointer(d)
-    ck.save(10, {"params": state.params, "momentum": state.momentum},
-            metadata={"n_peers": 16, "step": 10})
-    new_plan = elastic_replan(fed.plan, 9)
-    print(f"elastic replan 16->{9}: new grid={new_plan.dims}")
-    cfg9 = FederationConfig(n_peers=9, technique="mar", task="text",
-                            local_batches=2)
-    fed9 = Federation(cfg9)
-    state9 = fed9.init_state()
-    restored, meta = ck.restore_elastic(9)
-    state9.params = type(state9.params)(restored["params"]) \
-        if not isinstance(restored["params"], dict) else restored["params"]
-    state9 = type(state9)(params=restored["params"],
-                          momentum=restored["momentum"],
-                          iteration=meta["step"], rng=state9.rng)
-    for _ in range(5):
-        state9 = fed9.step(state9)
-    print(f"resumed with 9 peers from step {meta['step']}: "
-          f"acc={fed9.evaluate(state9):.3f}")
+    path = os.path.join(d, "membership.jsonl")
+    save_trace(path, lifecycle.event_log)
+    replay = build_lifecycle("trace", 16,
+                             churn_params={"events": load_trace(path)})
+    tick = replay.tick(0)
+    print(f"saved {len(lifecycle.event_log)} events; replay tick(0): "
+          f"{int(tick.u.sum())}/16 peers up")

@@ -80,6 +80,39 @@ def finalize_masked_mean(num: Array, den: Array, own: Array,
     return mean * (1.0 - empty) + own.astype(jnp.float32) * empty
 
 
+def resize_peer_axis(tree: PyTree, old_n: int, new_n: int,
+                     fill: str = "mean") -> PyTree:
+    """Grow/shrink the stacked peer axis of a pytree *in place* (no
+    checkpoint round-trip) — the elastic-membership primitive.
+
+    Leaves whose leading dim is ``old_n`` are resized; everything else
+    (scalars, shared state) passes through. Shrinking slices the first
+    ``new_n`` peers (each already holds a near-global average — MAR's
+    mixing makes any subset representative, same rule as
+    ``Checkpointer.restore_elastic``); survivors are bit-exact.
+    Growing appends peers bootstrapped from the current group mean
+    (``fill="mean"``) or zeros (``fill="zero"`` — for error-feedback
+    residuals and indicator state that must start empty).
+    """
+    if old_n == new_n:
+        return tree
+
+    def leaf(x):
+        if x.ndim == 0 or x.shape[0] != old_n:
+            return x
+        if new_n < old_n:
+            return x[:new_n]
+        if fill == "zero":
+            pad = jnp.zeros((new_n - old_n,) + x.shape[1:], x.dtype)
+        else:
+            mean = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+            pad = jnp.broadcast_to(
+                mean.astype(x.dtype), (new_n - old_n,) + x.shape[1:])
+        return jnp.concatenate([x, pad], axis=0)
+
+    return jax.tree.map(leaf, tree)
+
+
 # ---------------------------------------------------------------------------
 # accounting
 # ---------------------------------------------------------------------------
@@ -132,7 +165,8 @@ class Aggregator:
 
     def __init__(self, plan: GridPlan, num_rounds: Optional[int] = None,
                  backend: str = "sim", one_shot: bool = False,
-                 comm_dtype: Optional[str] = None):
+                 comm_dtype: Optional[str] = None,
+                 use_kernel: bool = False):
         if backend not in ("sim", "device"):
             raise ValueError(backend)
         if backend == "device" and not self.supports_device:
@@ -142,6 +176,7 @@ class Aggregator:
         self.backend = backend
         self.one_shot = one_shot
         self.comm_dtype = comm_dtype
+        self.use_kernel = use_kernel
 
     def __call__(self, state: PyTree, mask: Array) -> PyTree:
         raise NotImplementedError
@@ -181,7 +216,8 @@ class MarAggregator(Aggregator):
                 state, self.plan, mask, one_shot=self.one_shot,
                 comm_dtype=self.comm_dtype)
         return mar.mar_aggregate_sim(state, self.plan, mask,
-                                     num_rounds=self.num_rounds)
+                                     num_rounds=self.num_rounds,
+                                     use_kernel=self.use_kernel)
 
 
 class _GlobalMeanAggregator(Aggregator):
@@ -292,6 +328,12 @@ class WireStage:
                         model_bytes: int) -> float:
         return inner_bytes
 
+    def resize_state(self, own: PyTree, old_n: int, new_n: int) -> PyTree:
+        """Elastic membership: remap this stage's state to a new peer
+        count (mean-bootstrap by default; stages whose state must start
+        empty for new peers override)."""
+        return resize_peer_axis(own, old_n, new_n, fill="mean")
+
 
 @register_stage
 class Int8EFStage(WireStage):
@@ -333,6 +375,12 @@ class Int8EFStage(WireStage):
         from repro.core.compression import INT8_RATIO
         return inner_bytes / INT8_RATIO
 
+    def resize_state(self, own, old_n, new_n):
+        # a grown peer anchors at the mean reference but must not
+        # inherit another peer's quantization residual
+        return {"ref": resize_peer_axis(own["ref"], old_n, new_n, "mean"),
+                "err": resize_peer_axis(own["err"], old_n, new_n, "zero")}
+
 
 @register_stage
 class DPStage(WireStage):
@@ -372,6 +420,14 @@ class DPStage(WireStage):
             noise_multiplier=self.noise_multiplier, plan=self.plan,
             use_secagg=self.use_secagg)
         return out_state, {**carried["pipe"], self.name: new_dp}
+
+    def resize_state(self, own, old_n, new_n):
+        # has_delta is a bot marker: a new peer has no smoothed delta yet
+        out = {k: resize_peer_axis(v, old_n, new_n, "mean")
+               for k, v in own.items() if k != "has_delta"}
+        out["has_delta"] = resize_peer_axis(own["has_delta"], old_n,
+                                            new_n, "zero")
+        return out
 
 
 @register_stage
@@ -446,6 +502,16 @@ class AggregationPipeline:
                 out[stage.name] = st
         return out
 
+    def resize_state(self, pipe_state: Dict[str, PyTree], old_n: int,
+                     new_n: int) -> Dict[str, PyTree]:
+        """Elastic membership: each stage remaps its own state slice."""
+        out = dict(pipe_state)
+        for stage in self.stages:
+            if stage.name in out:
+                out[stage.name] = stage.resize_state(out[stage.name],
+                                                     old_n, new_n)
+        return out
+
     def __call__(self, state: PyTree, pipe_state: Dict[str, PyTree],
                  mask: Array, rng: Array
                  ) -> Tuple[PyTree, Dict[str, PyTree]]:
@@ -491,6 +557,7 @@ def build_pipeline(technique: str, plan: GridPlan, *,
                    backend: str = "sim",
                    one_shot: bool = False,
                    comm_dtype: Optional[str] = None,
+                   use_kernel: bool = False,
                    async_aggregation: bool = False,
                    use_dp: bool = False,
                    noise_multiplier: float = 0.3,
@@ -502,7 +569,8 @@ def build_pipeline(technique: str, plan: GridPlan, *,
     noising precedes quantization and both ride the delayed schedule."""
     aggregator = make_aggregator(technique, plan, num_rounds=num_rounds,
                                  backend=backend, one_shot=one_shot,
-                                 comm_dtype=comm_dtype)
+                                 comm_dtype=comm_dtype,
+                                 use_kernel=use_kernel)
     stages: List[WireStage] = []
     if async_aggregation:
         stages.append(AsyncStage())

@@ -20,7 +20,15 @@ communication cost (``topology.py``, tracked per source by the
 :class:`CommLedger`) and churn semantics. Partial participation and
 dropout follow §3.1: U_t peers run local updates; A_t = U_t minus
 dropouts joins aggregation; non-participants carry state forward
-(Alg. 1 line 5).
+(Alg. 1 line 5). Both masks come from a pluggable
+:class:`~repro.runtime.lifecycle.PeerLifecycle` (DESIGN.md §7):
+``cfg.churn`` picks the availability process (i.i.d. Bernoulli is the
+degenerate default, replaying the legacy ``sample_masks`` bit-exact),
+and permanent join/leave — from ``cfg.resize_schedule`` or trace
+events — triggers :meth:`Federation.resize`: the MAR grid is
+re-factorized (``elastic_replan``), the aggregation pipeline rebuilt,
+and the stacked peer axis of params/momentum/pipe state grown or
+shrunk in place, mid-run, with no checkpoint/restart.
 
 One FL iteration is a single jitted function of (state, masks, rng);
 the loop is host-side so benchmarks can interleave evaluation and
@@ -30,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,12 +46,19 @@ import numpy as np
 
 from repro.core import topology
 from repro.core.aggregation import (TECHNIQUES, AggregationPipeline,
-                                    CommLedger, build_pipeline)
+                                    CommLedger, build_pipeline,
+                                    resize_peer_axis)
 from repro.core.moshpit import GridPlan, plan_grid
 from repro.data.partition import dirichlet_partition, iid_partition
 from repro.data.synthetic import classification_task
 from repro.models.small import build_peer_model
 from repro.optim.sgdm import momentum_sgd_init, momentum_sgd_step
+
+# repro.runtime.{lifecycle,fault} are imported lazily inside methods:
+# they depend on repro.core.moshpit, so a module-level import here would
+# cycle when repro.runtime is imported first.
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.runtime.lifecycle import PeerLifecycle
 
 Array = jax.Array
 PyTree = Any
@@ -62,9 +77,21 @@ class FederationConfig:
     batch_size: int = 16              # 64 for vision, 16 for text per paper
     lr: float = 0.1
     momentum: float = 0.9
-    # participation / churn
+    # participation / churn — ``churn`` names a lifecycle scenario from
+    # runtime/lifecycle.py ("bernoulli" | "sessions" | "correlated" |
+    # "wireless" | "trace"); None keeps the legacy i.i.d. Bernoulli
+    # masks (bit-identical replay of pre-lifecycle runs).
     participation_rate: float = 1.0
     dropout_rate: float = 0.0
+    churn: Optional[str] = None
+    churn_params: Optional[Dict[str, Any]] = None
+    # mid-run elastic membership: ((iteration, new_n_peers), ...) —
+    # at each listed iteration the fleet permanently grows/shrinks and
+    # the runtime regroups in place (no checkpoint/restart)
+    resize_schedule: Tuple[Tuple[int, int], ...] = ()
+    # route the sim MAR masked group mean through the fused Pallas
+    # kernel (kernels/group_mean.py) instead of jnp segment sums
+    pallas_group_mean: bool = False
     # data heterogeneity
     alpha: Optional[float] = 1.0      # Dirichlet; None -> iid
     # KD (Alg. 2/3)
@@ -127,39 +154,30 @@ class Federation:
     """Owns the task data, the jitted iteration fn, the aggregation
     pipeline, and the comm ledger."""
 
-    def __init__(self, cfg: FederationConfig):
+    def __init__(self, cfg: FederationConfig,
+                 lifecycle: Optional["PeerLifecycle"] = None):
+        from repro.runtime.lifecycle import build_lifecycle
         if cfg.technique not in TECHNIQUES:
             raise ValueError(cfg.technique)
         self.cfg = cfg
         self.plan = cfg.grid()
-        self.pipeline: AggregationPipeline = build_pipeline(
-            cfg.technique, self.plan, num_rounds=cfg.mar_rounds,
-            async_aggregation=cfg.async_aggregation,
-            use_dp=cfg.use_dp, noise_multiplier=cfg.noise_multiplier,
-            dp_clip_init=cfg.dp_clip_init, use_secagg=cfg.use_secagg,
-            compress=cfg.compress)
+        self.pipeline = self._build_pipeline(cfg, self.plan)
         self.ledger = CommLedger()
+        self.lifecycle = lifecycle if lifecycle is not None else \
+            build_lifecycle(cfg.churn, cfg.n_peers, seed=cfg.seed,
+                            participation_rate=cfg.participation_rate,
+                            dropout_rate=cfg.dropout_rate,
+                            churn_params=cfg.churn_params,
+                            schedule=cfg.resize_schedule)
         spec, train, test = classification_task(cfg.task, seed=cfg.seed)
         self.spec = spec
+        self._train = train
         self.test = {k: jnp.asarray(v) for k, v in test.items()}
         self.init_fn, self.apply_fn = build_peer_model(
             cfg.task, spec.feature_dim, spec.num_classes)
 
         # --- federated partition (rectangular per-peer arrays) ----------
-        if cfg.alpha is None:
-            shards = iid_partition(len(train["y"]), cfg.n_peers,
-                                   seed=cfg.seed)
-        else:
-            shards = dirichlet_partition(train["y"], cfg.n_peers,
-                                         alpha=cfg.alpha, seed=cfg.seed)
-        rng = np.random.default_rng(cfg.seed + 1)
-        per_peer = max(cfg.batch_size,
-                       int(np.median([len(s) for s in shards])))
-        xs, ys = [], []
-        for s in shards:
-            take = rng.choice(s, size=per_peer, replace=len(s) < per_peer)
-            xs.append(train["x"][take])
-            ys.append(train["y"][take])
+        xs, ys = self._peer_shards(range(cfg.n_peers), cfg.n_peers)
         self.data_x = jnp.asarray(np.stack(xs))     # [N, P, D]
         self.data_y = jnp.asarray(np.stack(ys))     # [N, P]
 
@@ -167,6 +185,44 @@ class Federation:
             self.init_fn(jax.random.PRNGKey(0))) * 2  # theta + momentum
         self._it_fn = jax.jit(self._iteration,
                               static_argnames=("use_kd", "do_aggregate"))
+
+    @staticmethod
+    def _build_pipeline(cfg: FederationConfig,
+                        plan: GridPlan) -> AggregationPipeline:
+        return build_pipeline(
+            cfg.technique, plan, num_rounds=cfg.mar_rounds,
+            use_kernel=cfg.pallas_group_mean,
+            async_aggregation=cfg.async_aggregation,
+            use_dp=cfg.use_dp, noise_multiplier=cfg.noise_multiplier,
+            dp_clip_init=cfg.dp_clip_init, use_secagg=cfg.use_secagg,
+            compress=cfg.compress)
+
+    def _peer_shards(self, peers, n_peers: int,
+                     per_peer: Optional[int] = None):
+        """Data rows for the given peer ids out of an ``n_peers``-way
+        partition of the training set. Shard *membership* is
+        deterministic in (cfg.seed, n_peers); the per-peer row
+        subsample is seeded but consumes the rng in loop order, so a
+        mid-run joiner's rows differ from the rows it would have drawn
+        in a fresh run at the same size (the shard itself matches)."""
+        cfg = self.cfg
+        if cfg.alpha is None:
+            shards = iid_partition(len(self._train["y"]), n_peers,
+                                   seed=cfg.seed)
+        else:
+            shards = dirichlet_partition(self._train["y"], n_peers,
+                                         alpha=cfg.alpha, seed=cfg.seed)
+        rng = np.random.default_rng(cfg.seed + 1)
+        if per_peer is None:
+            per_peer = max(cfg.batch_size,
+                           int(np.median([len(s) for s in shards])))
+        xs, ys = [], []
+        for i in peers:
+            s = shards[i]
+            take = rng.choice(s, size=per_peer, replace=len(s) < per_peer)
+            xs.append(self._train["x"][take])
+            ys.append(self._train["y"][take])
+        return xs, ys
 
     @property
     def comm_bytes(self) -> float:
@@ -187,11 +243,16 @@ class Federation:
                                pipe=pipe)
 
     # ------------------------------------------------------------------
-    # masks
+    # masks (legacy API — the lifecycle is the pluggable source now)
     # ------------------------------------------------------------------
     def sample_masks(self, rng: np.random.Generator
                      ) -> Tuple[np.ndarray, np.ndarray]:
-        """(participates U_t, aggregates A_t) boolean masks, float32."""
+        """(participates U_t, aggregates A_t) boolean masks, float32.
+
+        Kept for callers that pre-compute masks; ``step()`` itself asks
+        ``self.lifecycle`` (whose Bernoulli model replays this exact
+        sampling sequence for ``churn=None`` configs).
+        """
         n = self.cfg.n_peers
         u = rng.random(n) < self.cfg.participation_rate
         if not u.any():
@@ -201,6 +262,56 @@ class Federation:
         if not a.any():
             a[np.flatnonzero(u)[0]] = True
         return u.astype(np.float32), a.astype(np.float32)
+
+    # ------------------------------------------------------------------
+    # elastic membership (mid-run, no checkpoint/restart)
+    # ------------------------------------------------------------------
+    def resize(self, state: FederationState,
+               new_n: int) -> FederationState:
+        """Permanent join/leave: re-factorize the MAR grid
+        (``elastic_replan``), rebuild the aggregation pipeline, and
+        grow/shrink the stacked peer axis of params/momentum/pipe state
+        in place. Surviving peers' state is untouched (bit-exact);
+        joining peers bootstrap from the group mean, with stage-specific
+        rules for wire state (EF residuals start at zero, DP bot
+        markers reset). Returns the resized state; the federation's
+        plan/pipeline/data/jit are swapped underneath.
+        """
+        from repro.runtime.fault import elastic_replan
+        old_n = self.cfg.n_peers
+        if new_n == old_n:
+            return state
+        if new_n < 1:
+            raise ValueError(f"cannot resize to {new_n} peers")
+        new_plan = elastic_replan(self.plan, new_n)
+
+        params = resize_peer_axis(state.params, old_n, new_n, "mean")
+        momentum = resize_peer_axis(state.momentum, old_n, new_n, "mean")
+        pipe = self.pipeline.resize_state(state.pipe, old_n, new_n)
+
+        # per-peer data: survivors keep their shard; joiners draw theirs
+        # from a new_n-way partition of the same training set
+        if new_n < old_n:
+            self.data_x = self.data_x[:new_n]
+            self.data_y = self.data_y[:new_n]
+        else:
+            xs, ys = self._peer_shards(range(old_n, new_n), new_n,
+                                       per_peer=self.data_x.shape[1])
+            self.data_x = jnp.concatenate(
+                [self.data_x, jnp.asarray(np.stack(xs))], axis=0)
+            self.data_y = jnp.concatenate(
+                [self.data_y, jnp.asarray(np.stack(ys))], axis=0)
+
+        self.cfg = dataclasses.replace(self.cfg, n_peers=new_n)
+        self.plan = new_plan
+        self.pipeline = self._build_pipeline(self.cfg, new_plan)
+        if self.lifecycle.n_peers != new_n:
+            self.lifecycle.resize(new_n)
+        # fresh jit cache: the old traces closed over the old data arrays
+        self._it_fn = jax.jit(self._iteration,
+                              static_argnames=("use_kd", "do_aggregate"))
+        return dataclasses.replace(state, params=params,
+                                   momentum=momentum, pipe=pipe)
 
     # ------------------------------------------------------------------
     # local update (vmapped Momentum-SGD over B minibatches)
@@ -263,9 +374,16 @@ class Federation:
     def step(self, state: FederationState,
              masks: Optional[Tuple[np.ndarray, np.ndarray]] = None
              ) -> FederationState:
+        if masks is not None:
+            u, a = masks
+        else:
+            tick = self.lifecycle.tick(state.iteration)
+            if tick.resize_to is not None:
+                # permanent join/leave: regroup in place, then run the
+                # iteration with the already-resized masks
+                state = self.resize(state, tick.resize_to)
+            u, a = tick.u, tick.a
         cfg = self.cfg
-        host_rng = np.random.default_rng(cfg.seed * 100003 + state.iteration)
-        u, a = masks if masks is not None else self.sample_masks(host_rng)
         rng, it_rng = jax.random.split(state.rng)
         use_kd = cfg.use_kd and state.iteration < cfg.kd_iterations
         kd_lambda = max(0.0, 1.0 - state.iteration / max(cfg.kd_iterations, 1))
@@ -320,12 +438,20 @@ class Federation:
 
 def run_federation(cfg: FederationConfig, iterations: int,
                    eval_every: int = 5,
-                   verbose: bool = False) -> Dict[str, List[float]]:
-    """Train and return the (accuracy, comm) history used by benchmarks."""
-    fed = Federation(cfg)
+                   verbose: bool = False,
+                   lifecycle: Optional["PeerLifecycle"] = None
+                   ) -> Dict[str, List[float]]:
+    """Train and return the (accuracy, comm) history used by benchmarks.
+
+    Churn scenarios (``cfg.churn``) and mid-run elastic resizes
+    (``cfg.resize_schedule``) run through the peer lifecycle inside
+    ``Federation.step``; the history tracks the live peer count and the
+    cumulative membership-event count alongside the paper metrics.
+    """
+    fed = Federation(cfg, lifecycle=lifecycle)
     state = fed.init_state()
     hist = {"iteration": [], "accuracy": [], "comm_bytes": [],
-            "disagreement": []}
+            "disagreement": [], "n_peers": [], "events": []}
     for t in range(iterations):
         state = fed.step(state)
         if (t + 1) % eval_every == 0 or t == iterations - 1:
@@ -334,7 +460,10 @@ def run_federation(cfg: FederationConfig, iterations: int,
             hist["accuracy"].append(acc)
             hist["comm_bytes"].append(fed.comm_bytes)
             hist["disagreement"].append(fed.peer_disagreement(state))
+            hist["n_peers"].append(fed.cfg.n_peers)
+            hist["events"].append(len(fed.lifecycle.event_log))
             if verbose:
                 print(f"  it={t+1:4d} acc={acc:.4f} "
-                      f"comm={fed.comm_bytes/1e6:.1f}MB")
+                      f"comm={fed.comm_bytes/1e6:.1f}MB "
+                      f"peers={fed.cfg.n_peers}")
     return hist

@@ -34,7 +34,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import AggregationPipeline, MarAggregator
+from repro.core.aggregation import (AggregationPipeline, MarAggregator,
+                                    resize_peer_axis)
 from repro.core.moshpit import GridPlan
 from repro.models.model import Model
 from repro.optim.sgdm import momentum_sgd_step
@@ -61,6 +62,34 @@ def init_fl_state(model: Model, n_peers: int, key: Array,
     return state
 
 
+def resize_fl_state(state: Dict[str, Any], new_n: int,
+                    pipeline: Optional[AggregationPipeline] = None
+                    ) -> Dict[str, Any]:
+    """Elastic membership for the device-backend FL state dict.
+
+    Shrinks/grows the stacked peer axis of params/momentum (and, via
+    the pipeline's per-stage hooks, any wire-stage state under
+    ``"pipe"``) in place — the same no-restart path as
+    ``Federation.resize``; survivors are bit-exact, joiners bootstrap
+    from the group mean. The caller re-plans the grid
+    (``runtime.fault.elastic_replan``) and rebuilds the train step for
+    the new plan.
+    """
+    old_n = jax.tree.leaves(state["params"])[0].shape[0]
+    if new_n == old_n:
+        return state
+    out = dict(state)
+    out["params"] = resize_peer_axis(state["params"], old_n, new_n)
+    out["momentum"] = resize_peer_axis(state["momentum"], old_n, new_n)
+    if "pipe" in state:
+        if pipeline is not None:
+            out["pipe"] = pipeline.resize_state(state["pipe"], old_n,
+                                                new_n)
+        else:
+            out["pipe"] = resize_peer_axis(state["pipe"], old_n, new_n)
+    return out
+
+
 def fl_state_shape(model: Model, n_peers: int,
                    momentum_dtype: str = "float32") -> Dict[str, Any]:
     """ShapeDtypeStructs of the FL state (dry-run; no allocation)."""
@@ -84,8 +113,8 @@ def make_fl_train_step(model: Model, grid: GridPlan, lr: float = 0.1,
                        comm_dtype: Optional[str] = None,
                        pipeline: Optional[AggregationPipeline] = None
                        ) -> Callable:
-    """Returns ``fl_train_step(state, batch, mask=None) -> (state,
-    metrics)``.
+    """Returns ``fl_train_step(state, batch, mask=None, agg_mask=None)
+    -> (state, metrics)``.
 
     batch: {"tokens": [P, B, n_micro, mb, s], "labels": ..., optional
     "prefix_embeds": ...} — P peers, B local steps, grad-accumulated
@@ -94,9 +123,12 @@ def make_fl_train_step(model: Model, grid: GridPlan, lr: float = 0.1,
     ``pipeline`` runs the same composable aggregation as the sim backend
     (device-backed MAR plus wire stages, e.g. ``int8_ef`` compression);
     without one, a plain device-MAR pipeline is built from ``one_shot``
-    / ``comm_dtype``. ``mask`` ([P] 0/1 float) is a participation mask
-    with the paper's churn semantics: masked peers keep their previous
-    state, contribute nothing to their group means, but receive them.
+    / ``comm_dtype``. ``mask`` ([P] 0/1 float) is the participation
+    mask U_t with the paper's churn semantics: masked peers keep their
+    previous state, contribute nothing to their group means, but
+    receive them. ``agg_mask`` (default: ``mask``) is the aggregation
+    mask A_t — peers in U_t but not A_t keep their local update yet
+    miss aggregation (the paper's dropout/straggler path, §3.1).
     When the pipeline carries wire-stage state, build the train state
     with ``init_fl_state(..., pipeline=...)``.
     """
@@ -130,7 +162,7 @@ def make_fl_train_step(model: Model, grid: GridPlan, lr: float = 0.1,
             one_step, (params, momentum), peer_batch)
         return params, momentum, jnp.mean(losses)
 
-    def fl_train_step(state, batch, mask=None):
+    def fl_train_step(state, batch, mask=None, agg_mask=None):
         params, momentum = state["params"], state["momentum"]
         new_p, new_m, loss = jax.vmap(peer_local_update)(
             params, momentum, batch)
@@ -148,8 +180,9 @@ def make_fl_train_step(model: Model, grid: GridPlan, lr: float = 0.1,
                 raise ValueError(
                     "pipeline has wire stages; build the state with "
                     "init_fl_state(..., pipeline=pipeline)")
-            m = (mask if mask is not None
-                 else jnp.ones((grid.capacity,), jnp.float32))
+            m = agg_mask if agg_mask is not None else mask
+            if m is None:
+                m = jnp.ones((grid.capacity,), jnp.float32)
             key = jax.random.fold_in(jax.random.PRNGKey(0), state["step"])
             agg, new_pipe = pipeline({"p": new_p, "m": new_m},
                                      state.get("pipe", {}), m, key)

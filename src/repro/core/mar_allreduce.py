@@ -60,17 +60,60 @@ def _segment_mean(x: Array, seg_ids: Array, num_groups: int,
                                 x).astype(x.dtype)
 
 
+def _kernel_round(state: PyTree, plan: GridPlan, rnd: int,
+                  mask: Array) -> PyTree:
+    """The Pallas ``group_mean`` path for one MAR round.
+
+    Permutes peers into round-``rnd`` group order, flattens each leaf to
+    [G, M, D] tiles, and runs the fused masked-mean kernel
+    (``kernels/group_mean.py`` — one VMEM pass instead of the four
+    materialized intermediates of the segment-sum path). Gather/scatter
+    indices are host-side numpy on the *static* plan, so the whole round
+    stays jit-traceable. Exact math parity with ``_segment_mean`` is
+    pinned by ``tests/test_aggregation.py``.
+    """
+    from repro.kernels.ops import group_mean
+
+    n, cap, m = plan.n_peers, plan.capacity, plan.dims[rnd]
+    keys = plan.group_key(np.arange(cap), rnd)
+    order = np.argsort(keys, kind="stable")          # [cap] peers by group
+    inv = np.argsort(order)
+    g = cap // m
+    if cap == n:
+        mask_g = mask[order].reshape(g, m)
+    else:
+        mask_g = jnp.concatenate(
+            [mask, jnp.zeros((cap - n,), mask.dtype)])[order].reshape(g, m)
+
+    def leaf(x):
+        tail = x.shape[1:]
+        d = max(1, int(np.prod(tail)))
+        xf = x.reshape(n, d)
+        if cap != n:
+            xf = jnp.concatenate(
+                [xf, jnp.zeros((cap - n, d), x.dtype)], axis=0)
+        out = group_mean(xf[order].reshape(g, m, d), mask_g)
+        return out.reshape(cap, d)[inv][:n].reshape((n,) + tail)
+
+    return jax.tree.map(leaf, state)
+
+
 def mar_round_sim(state: PyTree, plan: GridPlan, rnd: int,
-                  mask: Optional[Array] = None) -> PyTree:
+                  mask: Optional[Array] = None,
+                  use_kernel: bool = False) -> PyTree:
     """One MAR round over the leading peer axis (sim backend).
 
     ``state`` leaves: [N, ...] with N == plan.n_peers. Virtual slots
     (capacity > N) are handled by embedding into capacity internally.
+    ``use_kernel`` routes the masked group mean through the fused Pallas
+    kernel (jnp segment-sum otherwise — identical semantics).
     """
     n = plan.n_peers
     cap = plan.capacity
     if mask is None:
         mask = jnp.ones((n,), jnp.float32)
+    if use_kernel:
+        return _kernel_round(state, plan, rnd, mask)
     seg = jnp.asarray(plan.group_key(np.arange(cap), rnd), jnp.int32)
     num_groups = cap // plan.dims[rnd]
 
@@ -92,7 +135,8 @@ def mar_round_sim(state: PyTree, plan: GridPlan, rnd: int,
 
 def mar_aggregate_sim(state: PyTree, plan: GridPlan,
                       mask: Optional[Array] = None,
-                      num_rounds: Optional[int] = None) -> PyTree:
+                      num_rounds: Optional[int] = None,
+                      use_kernel: bool = False) -> PyTree:
     """Full MAR schedule: ``num_rounds`` (default depth) rounds in order.
 
     With full participation and an exact grid this returns the exact
@@ -100,7 +144,8 @@ def mar_aggregate_sim(state: PyTree, plan: GridPlan,
     """
     rounds = plan.depth if num_rounds is None else num_rounds
     for g in range(rounds):
-        state = mar_round_sim(state, plan, g % plan.depth, mask)
+        state = mar_round_sim(state, plan, g % plan.depth, mask,
+                              use_kernel=use_kernel)
     return state
 
 

@@ -3,13 +3,19 @@
 Runs real steps on the available devices (CPU here, reduced configs) or
 lowers the production config under the dry-run entry point. Integrates
 the full stack: config registry, synthetic LM pipeline, device-backend
-MAR-FL step, checkpoint/restart, health tracking, straggler masks.
+MAR-FL step, checkpoint/restart, and the churn-aware peer lifecycle
+(``runtime/lifecycle.py``): per-step participation masks come from a
+``--churn`` scenario, measured step durations feed the
+``HealthTracker`` heartbeats, and the per-iteration ``sweep()`` masks
+peers that stop heartbeating.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
       --smoke --steps 20 --peers 4 --ckpt-dir /tmp/ck
   PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m --smoke \
       --steps 10 --resume --ckpt-dir /tmp/ck
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+      --smoke --steps 10 --peers 4 --churn sessions
 """
 from __future__ import annotations
 
@@ -30,6 +36,7 @@ from repro.core.moshpit import plan_grid
 from repro.data.synthetic import lm_token_stream
 from repro.models.model import Model
 from repro.runtime.fault import HealthTracker, StragglerPolicy
+from repro.runtime.lifecycle import CHURN_MODELS, build_lifecycle
 from repro.runtime.metrics import MetricsLogger
 
 
@@ -53,6 +60,17 @@ def main(argv=None) -> int:
                          "(e.g. bfloat16)")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="per-step peer participation rate (churn mask)")
+    ap.add_argument("--churn", choices=sorted(CHURN_MODELS),
+                    default=None,
+                    help="peer-lifecycle scenario; default is i.i.d. "
+                         "Bernoulli driven by --participation/--dropout")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-step aggregation-dropout rate (bernoulli)")
+    ap.add_argument("--churn-trace", default=None,
+                    help="membership trace file for --churn trace")
+    ap.add_argument("--health-timeout", type=float, default=30.0,
+                    help="iterations without a heartbeat before a peer "
+                         "is marked dead")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
@@ -92,10 +110,23 @@ def main(argv=None) -> int:
 
     stream = lm_token_stream(cfg.vocab_size, args.peers * args.local_steps
                              * args.batch, args.seq, seed=args.seed)
-    health = HealthTracker(args.peers)
-    straggler = StragglerPolicy()
+    # lifecycle: scenario masks + health heartbeats/sweeps + deadlines.
+    # The lifecycle clock is the step counter, so --health-timeout is
+    # "steps without a heartbeat".
+    churn_params = {}
+    if args.churn == "trace":
+        if not args.churn_trace:
+            ap.error("--churn trace requires --churn-trace FILE")
+        churn_params["path"] = args.churn_trace
+    lifecycle = build_lifecycle(
+        args.churn, args.peers, seed=args.seed,
+        participation_rate=args.participation,
+        dropout_rate=args.dropout, churn_params=churn_params,
+        health=HealthTracker(args.peers, timeout_s=args.health_timeout),
+        straggler=StragglerPolicy())
     metrics_log = MetricsLogger(args.metrics)
-    mask_rng = np.random.default_rng(args.seed + 999)
+    always_full = args.churn is None and args.participation >= 1.0 \
+        and args.dropout <= 0.0
 
     for t in range(start, start + args.steps):
         raw = next(stream)
@@ -104,28 +135,32 @@ def main(argv=None) -> int:
                          args.seq)
             for k, v in raw.items()
         }
-        if args.participation < 1.0:
-            u = mask_rng.random(args.peers) < args.participation
-            if not u.any():
-                u[mask_rng.integers(args.peers)] = True
-        else:
-            u = np.ones(args.peers, bool)
+        tick = lifecycle.tick(t)
+        if tick.resize_to is not None:
+            raise SystemExit(
+                "[train] the device backend needs an exact grid; "
+                "permanent join/leave requires relaunch + "
+                "--resume (sim elastic regrouping: Federation.resize)")
+        u, a = tick.u, tick.a
         t0 = time.time()
-        if args.participation < 1.0:
-            state, metrics = step_fn(state, batch,
-                                     jnp.asarray(u, jnp.float32))
-        else:
+        if always_full:
             state, metrics = step_fn(state, batch)
+        else:
+            # U_t gates the local-update carry, A_t the aggregation —
+            # a straggler keeps its update but misses its group mean
+            state, metrics = step_fn(state, batch, jnp.asarray(u),
+                                     jnp.asarray(a))
         dt = time.time() - t0
-        pipeline.record_iteration(ledger, int(u.sum()), peer_model_bytes)
-        for p in range(args.peers):
-            health.heartbeat(p, dt)
+        pipeline.record_iteration(ledger, int(a.sum()), peer_model_bytes)
+        # heartbeat every peer that ran this step with its measured
+        # duration; silent peers age toward the sweep timeout
+        lifecycle.observe_durations(t, np.full(args.peers, dt), mask=u)
         metrics_log.log(t + 1, tokens=args.peers * args.local_steps
                         * args.batch * args.seq,
                         loss=float(metrics["loss"]))
         if (t + 1) % 5 == 0 or t == start:
             print(f"  step {t+1:4d} loss={float(metrics['loss']):.4f} "
-                  f"({dt*1e3:.0f} ms)")
+                  f"({dt*1e3:.0f} ms) active={int(a.sum())}/{args.peers}")
         if ckpt and (t + 1) % args.ckpt_every == 0:
             ckpt.save(t + 1, state,
                       metadata={"step": t + 1, "n_peers": args.peers,
@@ -143,6 +178,12 @@ def main(argv=None) -> int:
     per_source = " ".join(f"{k}={v/1e6:.1f}MB"
                           for k, v in ledger.by_source.items())
     print(f"[train] comm total={ledger.total_bytes/1e6:.1f}MB {per_source}")
+    if lifecycle.event_log:
+        by_kind: dict = {}
+        for e in lifecycle.event_log:
+            by_kind[e.kind] = by_kind.get(e.kind, 0) + len(e.peers)
+        print("[train] membership events: " + " ".join(
+            f"{k}={v}" for k, v in sorted(by_kind.items())))
     return 0
 
 

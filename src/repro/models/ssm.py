@@ -11,7 +11,7 @@ logsigmoid(f)) with the normalizer tracked via an appended ones-column.
 The chunked form (intra-chunk parallel, inter-chunk scan) is the reference
 for the ``repro.kernels.ssd_scan`` Pallas kernel.
 
-Faithfulness notes (DESIGN.md §7): mLSTM's exponential input gate is
+Faithfulness notes (DESIGN.md §8): mLSTM's exponential input gate is
 implemented with the max-stabilizer folded into sigmoid gating for scan
 stability (standard practice in xLSTM reimplementations); sLSTM keeps the
 exact exponential-gating stabilizer (m_t) since it runs a sequential scan.

@@ -1,2 +1,7 @@
+from repro.runtime.lifecycle import (CHURN_MODELS, ChurnModel, ChurnTick,
+                                     LifecycleTick, MembershipEvent,
+                                     PeerLifecycle, build_churn_model,
+                                     build_lifecycle, load_trace,
+                                     save_trace)
 from repro.runtime.sharding import (ShardPlan, make_shard_plan,
                                     state_shardings, batch_shardings)

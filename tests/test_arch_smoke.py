@@ -110,7 +110,7 @@ def test_param_counts_match_published_scale():
     SwiGLU FFN convention, which inflates archs whose published variant
     uses a 2-matrix MLP (starcoder2 +~40%, musicgen ~1.8B vs 1.5B) —
     and moonshot's assigned 48L exceeds Moonlight's published 27L
-    (~29B total). Documented in DESIGN.md §7.
+    (~29B total). Documented in DESIGN.md §8.
     """
     expect = {
         "granite-8b": (7e9, 9.5e9),

@@ -1,0 +1,379 @@
+"""Peer lifecycle runtime: churn models, event flow, trace replay, and
+mid-run elastic regrouping (grow 8->12, shrink 16->9) without restart."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.federation import Federation, FederationConfig
+from repro.runtime.fault import failure_impact
+from repro.runtime.fault import HealthTracker, StragglerPolicy
+from repro.runtime.lifecycle import (CHURN_MODELS, MembershipEvent,
+                                     PeerLifecycle, build_churn_model,
+                                     build_lifecycle, load_trace,
+                                     save_trace)
+
+
+# ---------------------------------------------------------------------------
+# churn models
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert {"bernoulli", "sessions", "correlated", "wireless",
+            "trace"} <= set(CHURN_MODELS)
+    with pytest.raises(ValueError):
+        build_churn_model("carrier-pigeon", 8)
+
+
+def test_bernoulli_replays_legacy_sample_masks():
+    """The degenerate case is bit-identical to the retired
+    Federation.sample_masks — pre-lifecycle runs replay exactly."""
+    cfg = FederationConfig(n_peers=16, technique="mar", task="text",
+                           participation_rate=0.6, dropout_rate=0.3,
+                           seed=9)
+    fed = Federation(cfg)
+    for t in range(6):
+        u0, a0 = fed.sample_masks(
+            np.random.default_rng(cfg.seed * 100003 + t))
+        tick = fed.lifecycle.tick(t)
+        np.testing.assert_array_equal(u0, tick.u)
+        np.testing.assert_array_equal(a0, tick.a)
+
+
+def test_sessions_availability_is_time_correlated():
+    """Markov sessions flip far less often than i.i.d. masks at the
+    same long-run availability — the whole point of the model."""
+    n, iters = 32, 200
+    sess = build_churn_model("sessions", n, seed=3, mean_up=10.0,
+                             mean_down=5.0)
+    rate = 10.0 / 15.0
+    iid = build_churn_model("bernoulli", n, seed=3,
+                            participation_rate=rate)
+
+    def flips(model):
+        prev, total, up = None, 0, 0.0
+        for t in range(iters):
+            u = model.tick(t).u
+            if prev is not None:
+                total += int(np.sum(prev != u))
+            up += float(u.mean())
+            prev = u
+        return total, up / iters
+
+    sess_flips, sess_avail = flips(sess)
+    iid_flips, _ = flips(iid)
+    assert sess_flips < 0.5 * iid_flips
+    assert 0.4 < sess_avail < 0.9          # near mean_up/(mean_up+down)
+
+
+def test_correlated_outages_take_whole_regions_down():
+    model = build_churn_model("correlated", 16, seed=5, n_regions=4,
+                              outage_rate=0.5, mean_outage=2.0,
+                              base_dropout=0.0)
+    region = model.region_of()
+    saw_outage = False
+    for t in range(30):
+        u = model.tick(t).u
+        if u.sum() == 1.0:
+            continue  # all regions out: the >=1-peer fallback fired
+        for r in range(4):
+            vals = u[region == r]
+            assert vals.min() == vals.max()   # region fails as one unit
+            if vals.max() == 0.0:
+                saw_outage = True
+    assert saw_outage
+
+
+def test_wireless_stragglers_update_but_miss_aggregation():
+    model = build_churn_model("wireless", 16, seed=2, slow_frac=0.25,
+                              slow_factor=6.0, jitter=0.05)
+    saw_straggler = False
+    for t in range(10):
+        tick = model.tick(t)
+        assert tick.u.all()                   # everyone ran the update
+        assert tick.durations is not None
+        if (tick.a == 0).any():
+            saw_straggler = True
+            slow = np.flatnonzero(tick.a == 0)
+            assert tick.durations[slow].min() > \
+                np.median(tick.durations[tick.a > 0])
+    assert saw_straggler
+
+
+def test_trace_roundtrip_and_replay(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    events = [MembershipEvent(0, "down", (1, 2)),
+              MembershipEvent(2, "up", (1,)),
+              MembershipEvent(3, "straggle", (0,)),
+              MembershipEvent(4, "join", (8, 9))]
+    save_trace(path, events)
+    assert load_trace(path) == events
+    with open(path) as f:                     # plain JSONL on disk
+        assert json.loads(f.readline())["kind"] == "down"
+
+    lc = build_lifecycle("trace", 8, churn_params={"path": path})
+    t0 = lc.tick(0)
+    np.testing.assert_array_equal(t0.u[[1, 2]], [0.0, 0.0])
+    t2 = lc.tick(2)
+    assert t2.u[1] == 1.0 and t2.u[2] == 0.0
+    t3 = lc.tick(3)
+    assert t3.u[0] == 1.0 and t3.a[0] == 0.0  # straggle: U_t yes, A_t no
+    t4 = lc.tick(4)
+    assert t4.resize_to == 10 and t4.u.shape == (10,)
+
+
+def test_lifecycle_recorded_run_replays_identically(tmp_path):
+    """Record a sessions run's event stream, replay it through the
+    trace model: identical masks at every iteration."""
+    n, iters = 12, 25
+    rec = build_lifecycle("sessions", n, seed=7,
+                          churn_params={"mean_up": 5.0, "mean_down": 2.0})
+    recorded = [rec.tick(t) for t in range(iters)]
+    path = str(tmp_path / "rec.jsonl")
+    save_trace(path, rec.event_log)
+    rep = build_lifecycle("trace", n, churn_params={"path": path})
+    for t in range(iters):
+        tick = rep.tick(t)
+        np.testing.assert_array_equal(recorded[t].u, tick.u, err_msg=str(t))
+
+
+@pytest.mark.parametrize("scenario,params,health_timeout", [
+    ("bernoulli", {"participation_rate": 0.6, "dropout_rate": 0.3}, None),
+    ("sessions", {"mean_up": 4.0, "mean_down": 3.0}, 3.0),
+])
+def test_event_log_is_canonical_replayable(tmp_path, scenario, params,
+                                           health_timeout):
+    """Regression: the event_log records deltas of the FINAL masks —
+    i.i.d. models and health-tracked runs (DEAD suppression included)
+    replay exactly, not just session models."""
+    n, iters = 10, 20
+    health = (HealthTracker(n, timeout_s=health_timeout)
+              if health_timeout else None)
+    rec = build_lifecycle(scenario, n, seed=5, churn_params=params,
+                          health=health)
+    ticks = [rec.tick(t) for t in range(iters)]
+    path = str(tmp_path / "c.jsonl")
+    save_trace(path, rec.event_log)
+    rep = build_lifecycle("trace", n, churn_params={"path": path})
+    for t in range(iters):
+        tick = rep.tick(t)
+        np.testing.assert_array_equal(ticks[t].u, tick.u, err_msg=str(t))
+        np.testing.assert_array_equal(ticks[t].a, tick.a, err_msg=str(t))
+
+
+def test_correlated_resize_below_region_count():
+    """Regression: shrinking under n_regions used to leave _remaining
+    at the old length and crash the next tick on a broadcast error."""
+    lc = build_lifecycle("correlated", 16,
+                         churn_params={"n_regions": 4, "outage_rate": 0.3},
+                         schedule=((2, 3),))
+    for t in range(6):
+        tick = lc.tick(t)
+    assert lc.n_peers == 3 and tick.u.shape == (3,)
+
+
+def test_joiners_not_swept_dead_on_arrival():
+    """Regression: joining peers' heartbeat baseline is the join time,
+    not iteration 0 — a late joiner must not be timeout-dead at birth."""
+    lc = build_lifecycle("bernoulli", 4, participation_rate=0.5,
+                         health=HealthTracker(4, timeout_s=5.0),
+                         schedule=((20, 6),))
+    for t in range(25):
+        tick = lc.tick(t)
+        assert not any(e.kind == "dead" and any(p >= 4 for p in e.peers)
+                       for e in tick.events), t
+
+
+# ---------------------------------------------------------------------------
+# lifecycle runtime: health + deadlines as event consumers
+# ---------------------------------------------------------------------------
+
+def test_health_sweep_marks_silent_peer_dead():
+    """A peer the model keeps down longer than the timeout is DEAD; it
+    revives once it heartbeats again."""
+    path_events = [MembershipEvent(0, "down", (3,)),
+                   MembershipEvent(6, "up", (3,))]
+    lc = build_lifecycle("trace", 6, churn_params={"events": path_events},
+                         health=HealthTracker(6, timeout_s=3.0))
+    kinds = []
+    for t in range(8):
+        tick = lc.tick(t)
+        kinds.extend(e.kind for e in tick.events)
+        if t in (4, 5):
+            assert tick.u[3] == 0.0
+        if t == 7:
+            assert tick.u[3] == 1.0           # heartbeat revived it
+    assert "dead" in kinds
+
+
+def test_straggler_policy_consumes_reported_durations():
+    class _SlowPeer(CHURN_MODELS["bernoulli"]):
+        def tick(self, t):
+            tick = super().tick(t)
+            dur = np.ones(self.n_peers)
+            dur[2] = 50.0
+            tick.durations = dur
+            return tick
+
+    lc = PeerLifecycle(_SlowPeer(8, seed=0),
+                       straggler=StragglerPolicy(k_std=2.0,
+                                                 min_deadline_s=0.0))
+    tick = lc.tick(0)
+    assert tick.u[2] == 1.0 and tick.a[2] == 0.0
+    assert any(e.kind == "straggle" and 2 in e.peers
+               for e in tick.events)
+
+
+def test_lifecycle_never_goes_fully_silent():
+    lc = build_lifecycle("bernoulli", 4, participation_rate=0.0,
+                         dropout_rate=1.0)
+    for t in range(5):
+        tick = lc.tick(t)
+        assert tick.u.sum() >= 1 and tick.a.sum() >= 1
+
+
+# ---------------------------------------------------------------------------
+# mid-run elastic regrouping (the acceptance scenarios)
+# ---------------------------------------------------------------------------
+
+def _leaf0(tree):
+    return jax.tree.leaves(tree)[0]
+
+
+def _assert_peer_axis(tree, n):
+    for leaf in jax.tree.leaves(tree):
+        assert leaf.shape[0] == n, leaf.shape
+
+
+def test_elastic_grow_8_to_12_midrun():
+    cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                           resize_schedule=((3, 12),),
+                           async_aggregation=True, compress="int8_ef",
+                           seed=0)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    for _ in range(3):
+        state = fed.step(state)
+    state = fed.step(state)                    # iteration 3: resize fires
+
+    assert fed.cfg.n_peers == 12
+    assert fed.plan.n_peers == 12 and fed.plan.capacity >= 12
+    _assert_peer_axis(state.params, 12)
+    _assert_peer_axis(state.momentum, 12)
+    # wire-stage state resized in place alongside
+    _assert_peer_axis(state.pipe["int8_ef"]["ref"], 12)
+    _assert_peer_axis(state.pipe["async"]["pending"]["agg"]["p"], 12)
+    assert fed.data_x.shape[0] == 12
+
+    # failure impact reflects the new plan's geometry
+    impact = failure_impact(fed.plan, [0])
+    assert set(impact) == {f"round_{g}_groups_touched"
+                           for g in range(fed.plan.depth)}
+
+    for _ in range(3):                         # converges post-resize
+        state = fed.step(state)
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_elastic_shrink_16_to_9_midrun_preserves_survivors():
+    cfg = FederationConfig(n_peers=16, technique="mar", task="text",
+                           seed=1)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    for _ in range(3):
+        state = fed.step(state)
+    before = jax.tree.map(np.asarray, state.params)
+    before_m = jax.tree.map(np.asarray, state.momentum)
+
+    resized = fed.resize(state, 9)             # direct mid-run call
+    assert fed.cfg.n_peers == 9
+    assert fed.plan.dims == (3, 3)             # elastic_replan refactored
+    _assert_peer_axis(resized.params, 9)
+    _assert_peer_axis(resized.momentum, 9)
+    assert fed.data_x.shape[0] == 9
+
+    # surviving peers' params/momentum are preserved BIT-EXACT
+    for b, a in zip(jax.tree.leaves(before),
+                    jax.tree.leaves(resized.params)):
+        np.testing.assert_array_equal(b[:9], np.asarray(a))
+    for b, a in zip(jax.tree.leaves(before_m),
+                    jax.tree.leaves(resized.momentum)):
+        np.testing.assert_array_equal(b[:9], np.asarray(a))
+
+    impact = failure_impact(fed.plan, [4])
+    assert impact["round_0_groups_touched"] == pytest.approx(1 / 3)
+    assert impact["round_1_groups_touched"] == pytest.approx(1 / 3)
+
+    state = resized
+    for _ in range(3):
+        state = fed.step(state)
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_elastic_grow_bootstraps_new_peers_from_group_mean():
+    cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                           seed=2)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    for _ in range(2):
+        state = fed.step(state)
+    mean = jax.tree.map(lambda x: np.asarray(jnp.mean(x, 0)),
+                        state.params)
+    old = jax.tree.map(np.asarray, state.params)
+    resized = fed.resize(state, 12)
+    for m, o, a in zip(jax.tree.leaves(mean), jax.tree.leaves(old),
+                       jax.tree.leaves(resized.params)):
+        np.testing.assert_array_equal(o, np.asarray(a)[:8])
+        for p in range(8, 12):
+            np.testing.assert_allclose(np.asarray(a)[p], m, rtol=1e-6)
+
+
+def test_elastic_resize_with_dp_stage_resets_bot_marker():
+    cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                           use_dp=True, seed=3)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    state = fed.step(state)
+    resized = fed.resize(state, 12)
+    dp = resized.pipe["dp"]
+    assert dp["has_delta"].shape == (12,)
+    np.testing.assert_array_equal(np.asarray(dp["has_delta"][8:]),
+                                  np.zeros(4))
+    _assert_peer_axis(dp["last_global"], 12)
+    state = fed.step(resized)                  # still steps cleanly
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_run_federation_all_builtin_scenarios_complete():
+    from repro.core.federation import run_federation
+    scenarios = {
+        "bernoulli": dict(churn=None, participation_rate=0.7,
+                          dropout_rate=0.2),
+        "sessions": dict(churn="sessions"),
+        "correlated": dict(churn="correlated",
+                           churn_params={"n_regions": 2,
+                                         "outage_rate": 0.2}),
+    }
+    for name, kw in scenarios.items():
+        cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                               seed=4, **kw)
+        hist = run_federation(cfg, 4, eval_every=2)
+        assert np.isfinite(hist["accuracy"][-1]), name
+        assert hist["comm_bytes"][-1] > 0, name
+
+
+def test_run_federation_trace_scenario_completes(tmp_path):
+    from repro.core.federation import run_federation
+    path = str(tmp_path / "t.jsonl")
+    save_trace(path, [MembershipEvent(1, "down", (0, 1)),
+                      MembershipEvent(3, "up", (0,))])
+    cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                           churn="trace", churn_params={"path": path},
+                           seed=5)
+    hist = run_federation(cfg, 4, eval_every=2)
+    assert np.isfinite(hist["accuracy"][-1])
