@@ -40,6 +40,7 @@ def main(argv=None) -> int:
         emit("fig1_train", technique=tech, peers=s["peers"],
              final_acc=round(hist["accuracy"][-1], 4),
              comm_mb=round(hist["comm_bytes"][-1] / 1e6, 1),
+             sim_s=round(hist["sim_s"][-1], 3),
              mb_to_target=(round(reached / 1e6, 1)
                            if reached else "not_reached"))
     return 0

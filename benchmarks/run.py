@@ -23,6 +23,7 @@ MODULES = [
     "fig8_noniid",
     "fig11_approx_agg",
     "wire_ladder",
+    "wallclock_scaling",
     "kernel_bench",
 ]
 

@@ -1,0 +1,110 @@
+"""Wall-clock scaling: the O(N log N) vs O(N^2) gap in *seconds*.
+
+The paper's headline (Fig. 1) compares techniques by bytes; the
+wireless-FL literature argues per-round *timing* over heterogeneous
+links is what actually limits scale. This benchmark unrolls one FL
+iteration of every registered technique into messages
+(``core/transport.py``), times them over the lognormal-wireless link
+profile with the discrete-event simulator (``runtime/network.py``),
+and reports measured bytes + simulated seconds per iteration across
+N in {8, 16, 64, 125}.
+
+Expected shape, from uplink serialization alone: MAR sends G*(M-1)
+models per peer, so its per-iteration wall-clock grows ~log N, while
+AR's N-1 sends per peer grow ~N — the byte gap becomes a time gap on
+the *same* links. Measured bytes are cross-checked against the
+analytic oracles (``core/topology.py``) row by row (loss=0 parity).
+
+Emits CSV rows plus ``BENCH_comm.json`` (bytes + simulated seconds per
+technique per N) so the perf trajectory has machine-readable data
+points.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+from benchmarks.common import emit, std_argparser
+from repro.core import topology
+from repro.core.aggregation import TECHNIQUES, make_aggregator
+from repro.core.moshpit import plan_grid
+from repro.runtime.network import NetworkSim
+
+ORDER = ("fedavg", "hierarchical", "mar", "gossip", "rdfl", "ar")
+
+
+def main(argv=None) -> int:
+    ap = std_argparser(__doc__)
+    ap.add_argument("--profile", default="wireless",
+                    help="link model (uniform | wireless | regions)")
+    ap.add_argument("--model-mb", type=float, default=10.0,
+                    help="state bytes per transfer (theta + momentum)")
+    ap.add_argument("--iters", type=int, default=3,
+                    help="simulated iterations to average over")
+    ap.add_argument("--out", default="BENCH_comm.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        peer_counts = (8, 16)
+    elif args.full:
+        peer_counts = (8, 16, 64, 125, 512)
+    else:
+        peer_counts = (8, 16, 64, 125)
+    model_bytes = args.model_mb * 1e6
+
+    techniques = [t for t in ORDER if t in TECHNIQUES] + \
+        sorted(set(TECHNIQUES) - set(ORDER))
+    results = []
+    per_iter_s = {}           # (technique, n) -> mean seconds
+    for n in peer_counts:
+        plan = plan_grid(n)
+        mask = np.ones(n, np.float32)
+        for tech in techniques:
+            agg = make_aggregator(tech, plan)
+            mplan = agg.message_plan(mask, model_bytes)
+            net = NetworkSim(n, profile=args.profile, seed=args.seed)
+            # links are fixed per sim and loss only matters on lossy
+            # profiles, so the last transcript serves for bytes too
+            transcripts = [net.run(mplan) for _ in range(args.iters)]
+            tr = transcripts[-1]
+            analytic = topology.iteration_bytes(
+                tech, n, model_bytes, plan, num_rounds=agg.num_rounds)
+            sim_s = float(np.mean([t.iteration_s for t in transcripts]))
+            per_iter_s[(tech, n)] = sim_s
+            row = dict(technique=tech, n_peers=n, grid=str(plan.dims),
+                       messages=mplan.n_messages,
+                       bytes=int(tr.total_bytes),
+                       analytic_bytes=int(analytic),
+                       parity=abs(tr.total_bytes - analytic) < 1.0,
+                       sim_s=round(sim_s, 4))
+            emit("wallclock", **row)
+            results.append(row)
+
+    # acceptance summary: growth factor from the smallest to the
+    # largest N — MAR should track ~log N, AR ~N, on identical links
+    lo, hi = peer_counts[0], peer_counts[-1]
+    summary = {}
+    for tech in ("mar", "ar"):
+        if (tech, lo) in per_iter_s and per_iter_s[(tech, lo)] > 0:
+            summary[f"{tech}_growth"] = round(
+                per_iter_s[(tech, hi)] / per_iter_s[(tech, lo)], 2)
+    summary["n_growth"] = round(hi / lo, 2)
+    summary["logn_growth"] = round(np.log2(hi) / np.log2(lo), 2)
+    emit("wallclock_summary", profile=args.profile, n_lo=lo, n_hi=hi,
+         **summary)
+
+    with open(args.out, "w") as f:
+        json.dump({"benchmark": "wallclock_scaling",
+                   "profile": args.profile,
+                   "model_bytes": model_bytes,
+                   "seed": args.seed,
+                   "summary": summary,
+                   "results": results}, f, indent=2)
+    print(f"# wrote {args.out}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

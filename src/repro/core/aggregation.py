@@ -23,11 +23,17 @@ pieces so every technique x wire-transform x backend combination is a
   old step-function forks asserted out — compress∘dp ("quantize after
   noising"), async∘compress — are now just stage lists.
 
-* :class:`CommLedger` — *how many bytes* moved. Each aggregator reports
-  its analytic data-plane bytes (``topology.py``) and each stage
-  transforms them (e.g. / ``INT8_RATIO``); the pipeline records the
-  result per source so benchmarks read one ledger instead of calling
-  ``topology.iteration_bytes`` ad hoc at every step path.
+* :class:`CommLedger` — *how many bytes (and simulated seconds)* moved.
+  Every aggregator can unroll itself into a per-round message plan
+  (:meth:`Aggregator.message_plan`, ``core/transport.py``); the
+  discrete-event network layer (``runtime/network.py``) times those
+  messages over modeled links and the resulting transcript feeds the
+  ledger (:meth:`AggregationPipeline.record_transcript`). The analytic
+  formulas in ``topology.py`` remain as cross-checked oracles — equal
+  to the transcript in the no-loss case — and still drive the legacy
+  :meth:`AggregationPipeline.record_iteration` path. Stages transform
+  wire sizes either way (e.g. / ``INT8_RATIO``), so compression shrinks
+  simulated transfer time, not just the byte total.
 
 Canonical aggregation state is a dict ``{"p": params, "m": momentum}``
 with peers on the leading axis of every leaf; stages may grow it with
@@ -121,17 +127,28 @@ def resize_peer_axis(tree: PyTree, old_n: int, new_n: int,
 class CommLedger:
     """Per-source communication accounting, replacing the ad-hoc
     ``topology.iteration_bytes`` calls that used to sit (and disagree)
-    at every step-path call site."""
+    at every step-path call site.
+
+    Since the discrete-event network layer (``runtime/network.py``),
+    the ledger carries a time axis too: ``total_seconds`` accumulates
+    simulated wall-clock from transport transcripts, so benchmarks can
+    report *seconds* per technique alongside bytes.
+    """
 
     total_bytes: float = 0.0
+    total_seconds: float = 0.0
     by_source: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def record(self, source: str, nbytes: float) -> None:
         self.total_bytes += nbytes
         self.by_source[source] = self.by_source.get(source, 0.0) + nbytes
 
+    def record_time(self, seconds: float) -> None:
+        self.total_seconds += seconds
+
     def reset(self) -> None:
         self.total_bytes = 0.0
+        self.total_seconds = 0.0
         self.by_source.clear()
 
 
@@ -181,10 +198,27 @@ class Aggregator:
     def __call__(self, state: PyTree, mask: Array) -> PyTree:
         raise NotImplementedError
 
-    def iteration_bytes(self, n_active: int, model_bytes: int) -> float:
-        """Analytic data-plane bytes for one aggregation (topology.py)."""
+    def iteration_bytes(self, n_active: int, model_bytes: int,
+                        mask: Optional[Any] = None) -> float:
+        """Analytic data-plane bytes for one aggregation (topology.py).
+
+        The analytic model is the cross-checked *oracle* now — the
+        ledger is fed from measured transport transcripts
+        (:meth:`message_plan` + ``runtime/network.py``); ``mask`` makes
+        the MAR entry exact per group under churn.
+        """
         return topology.iteration_bytes(
             self.name, n_active, model_bytes, self.plan,
+            num_rounds=self.num_rounds, mask=mask)
+
+    def message_plan(self, mask: Optional[Any],
+                     model_bytes: float) -> "Any":
+        """Unroll one aggregation into per-round ``(src, dst, nbytes)``
+        messages (``core/transport.py``) — who sends what to whom, the
+        input the discrete-event network simulator times and drops."""
+        from repro.core import transport
+        return transport.build_message_plan(
+            self.name, self.plan, mask, model_bytes,
             num_rounds=self.num_rounds)
 
     def kd_bytes(self, n_active: int, model_bytes: int,
@@ -524,23 +558,66 @@ class AggregationPipeline:
         return run(0, state, pipe_state)
 
     # -- accounting -----------------------------------------------------
-    def iteration_bytes(self, n_active: int, model_bytes: int) -> float:
+    def iteration_bytes(self, n_active: int, model_bytes: int,
+                        mask: Optional[Any] = None) -> float:
         """Wire bytes of one aggregation after all stage transforms."""
-        b = self.aggregator.iteration_bytes(n_active, model_bytes)
+        b = self.aggregator.iteration_bytes(n_active, model_bytes, mask)
         for stage in reversed(self.stages):      # inner-to-outer
             b = stage.transform_bytes(b, n_active, model_bytes)
         return b
 
+    def wire_model_bytes(self, model_bytes: float,
+                         n_active: int) -> float:
+        """Per-message wire size of one state transfer after stage
+        transforms (e.g. / ``INT8_RATIO``) — the ``nbytes`` messages
+        carry in a transport plan, so compression shrinks simulated
+        transfer *time*, not just the ledger's byte total."""
+        b = float(model_bytes)
+        for stage in reversed(self.stages):      # inner-to-outer
+            b = stage.transform_bytes(b, n_active, model_bytes)
+        return b
+
+    def message_plan(self, mask: Optional[Any], model_bytes: float,
+                     n_active: int) -> Any:
+        """The aggregator's message plan at post-stage wire sizes."""
+        return self.aggregator.message_plan(
+            mask, self.wire_model_bytes(model_bytes, n_active))
+
+    def record_transcript(self, ledger: CommLedger, transcript: Any,
+                          n_active: int, model_bytes: int,
+                          use_kd: bool = False,
+                          kd_logit_bytes: int = 0) -> float:
+        """Record one FL iteration from a measured network transcript
+        (``runtime/network.py``) — bytes as transmitted (lost messages
+        consumed airtime and are billed) plus simulated seconds. KD
+        traffic stays analytic and untransformed, exactly as in
+        :meth:`record_iteration`: distillation exchanges don't ride the
+        compressed delta wire format (and aren't network-scheduled yet
+        — ROADMAP open item)."""
+        ledger.record(f"agg/{self.aggregator.name}",
+                      transcript.total_bytes)
+        ledger.record_time(transcript.iteration_s)
+        total = transcript.total_bytes
+        if use_kd:
+            kd = self.aggregator.kd_bytes(n_active, model_bytes,
+                                          kd_logit_bytes)
+            if kd:
+                ledger.record("kd", kd)
+                total += kd
+        return total
+
     def record_iteration(self, ledger: CommLedger, n_active: int,
                          model_bytes: int, use_kd: bool = False,
-                         kd_logit_bytes: int = 0) -> float:
-        """Record one FL iteration's bytes; returns the total recorded.
+                         kd_logit_bytes: int = 0,
+                         mask: Optional[Any] = None) -> float:
+        """Record one FL iteration's *analytic* bytes (legacy path for
+        callers without a network sim); returns the total recorded.
 
         KD traffic (teacher-model pulls + logits, MKD) is recorded
         separately and untransformed — distillation exchanges don't ride
         the compressed delta wire format.
         """
-        data = self.iteration_bytes(n_active, model_bytes)
+        data = self.iteration_bytes(n_active, model_bytes, mask)
         ledger.record(f"agg/{self.aggregator.name}", data)
         total = data
         if use_kd:

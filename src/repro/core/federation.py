@@ -112,6 +112,16 @@ class FederationConfig:
     # compression wire stage: int8 error-feedback delta compression on
     # the wire (core/compression.py) — 4x fewer bytes, bias-free in time
     compress: Optional[str] = None    # None | "int8_ef"
+    # discrete-event network layer (runtime/network.py): every
+    # aggregation is unrolled into messages and timed over modeled
+    # links; the CommLedger is fed from the measured transcript. None
+    # -> the lossless "uniform" profile (bytes match the analytic
+    # oracles; time is still simulated). "wireless"/"regions" add
+    # lognormal heterogeneity, latency, and per-message loss — a peer
+    # whose message is lost mid-round is demoted to receiver-only for
+    # that aggregation (paper §3.1 churn semantics).
+    link_profile: Optional[str] = None
+    link_params: Optional[Dict[str, Any]] = None
     seed: int = 0
 
     def grid(self) -> GridPlan:
@@ -152,17 +162,34 @@ class FederationState:
 
 class Federation:
     """Owns the task data, the jitted iteration fn, the aggregation
-    pipeline, and the comm ledger."""
+    pipeline, the discrete-event network sim, and the comm ledger.
+
+    Communication accounting is *measured*: each step unrolls the
+    aggregation into a message plan (``core/transport.py``), the
+    :class:`~repro.runtime.network.NetworkSim` times (and, under lossy
+    profiles, drops) every message over per-peer modeled links, and the
+    transcript feeds the ledger — bytes and simulated wall-clock
+    seconds. ``cfg.link_profile`` picks the link model ("uniform"
+    lossless default, "wireless" lognormal heterogeneity, "regions"
+    tiered blocks); lost sends demote their peer to receiver-only for
+    the iteration (DESIGN.md §9).
+    """
 
     def __init__(self, cfg: FederationConfig,
                  lifecycle: Optional["PeerLifecycle"] = None):
         from repro.runtime.lifecycle import build_lifecycle
+        from repro.runtime.network import NetworkSim
         if cfg.technique not in TECHNIQUES:
             raise ValueError(cfg.technique)
         self.cfg = cfg
         self.plan = cfg.grid()
         self.pipeline = self._build_pipeline(cfg, self.plan)
         self.ledger = CommLedger()
+        self.network = NetworkSim(cfg.n_peers,
+                                  profile=cfg.link_profile or "uniform",
+                                  seed=cfg.seed,
+                                  link_params=cfg.link_params)
+        self.last_transcript = None
         self.lifecycle = lifecycle if lifecycle is not None else \
             build_lifecycle(cfg.churn, cfg.n_peers, seed=cfg.seed,
                             participation_rate=cfg.participation_rate,
@@ -228,6 +255,11 @@ class Federation:
     def comm_bytes(self) -> float:
         """Total data-plane bytes so far (CommLedger-backed)."""
         return self.ledger.total_bytes
+
+    @property
+    def sim_seconds(self) -> float:
+        """Cumulative simulated communication wall-clock (NetworkSim)."""
+        return self.network.clock
 
     # ------------------------------------------------------------------
     def init_state(self) -> FederationState:
@@ -307,6 +339,8 @@ class Federation:
         self.pipeline = self._build_pipeline(self.cfg, new_plan)
         if self.lifecycle.n_peers != new_n:
             self.lifecycle.resize(new_n)
+        # survivors keep their modeled links; joiners draw fresh ones
+        self.network.resize(new_n)
         # fresh jit cache: the old traces closed over the old data arrays
         self._it_fn = jax.jit(self._iteration,
                               static_argnames=("use_kd", "do_aggregate"))
@@ -388,13 +422,27 @@ class Federation:
         use_kd = cfg.use_kd and state.iteration < cfg.kd_iterations
         kd_lambda = max(0.0, 1.0 - state.iteration / max(cfg.kd_iterations, 1))
 
+        # simulate this iteration's traffic *before* aggregating: the
+        # transcript both feeds the ledger (measured bytes + simulated
+        # seconds replace the analytic formulas) and, under lossy link
+        # profiles, demotes peers whose sends were lost mid-round to
+        # receiver-only (paper §3.1 — they rejoin with the group mean)
+        from repro.runtime.network import demote_lost_senders
+        n_active = int(a.sum())
+        mplan = self.pipeline.message_plan(np.asarray(a),
+                                           self.model_bytes, n_active)
+        transcript = self.network.run(mplan)
+        self.last_transcript = transcript
+        a = demote_lost_senders(a, u, transcript)
+
         params, momentum, pipe = self._it_fn(
             state.params, state.momentum, state.pipe,
             jnp.asarray(u), jnp.asarray(a), it_rng,
             jnp.asarray(kd_lambda, jnp.float32), use_kd=use_kd)
 
-        self.pipeline.record_iteration(
-            self.ledger, int(a.sum()), self.model_bytes, use_kd=use_kd,
+        self.pipeline.record_transcript(
+            self.ledger, transcript, n_active, self.model_bytes,
+            use_kd=use_kd,
             kd_logit_bytes=self._kd_logit_bytes() if use_kd else 0)
         return FederationState(params=params, momentum=momentum,
                                iteration=state.iteration + 1, rng=rng,
@@ -451,7 +499,7 @@ def run_federation(cfg: FederationConfig, iterations: int,
     fed = Federation(cfg, lifecycle=lifecycle)
     state = fed.init_state()
     hist = {"iteration": [], "accuracy": [], "comm_bytes": [],
-            "disagreement": [], "n_peers": [], "events": []}
+            "sim_s": [], "disagreement": [], "n_peers": [], "events": []}
     for t in range(iterations):
         state = fed.step(state)
         if (t + 1) % eval_every == 0 or t == iterations - 1:
@@ -459,11 +507,13 @@ def run_federation(cfg: FederationConfig, iterations: int,
             hist["iteration"].append(t + 1)
             hist["accuracy"].append(acc)
             hist["comm_bytes"].append(fed.comm_bytes)
+            hist["sim_s"].append(fed.sim_seconds)
             hist["disagreement"].append(fed.peer_disagreement(state))
             hist["n_peers"].append(fed.cfg.n_peers)
             hist["events"].append(len(fed.lifecycle.event_log))
             if verbose:
                 print(f"  it={t+1:4d} acc={acc:.4f} "
                       f"comm={fed.comm_bytes/1e6:.1f}MB "
+                      f"sim={fed.sim_seconds:.2f}s "
                       f"peers={fed.cfg.n_peers}")
     return hist

@@ -1,5 +1,11 @@
 """Analytic communication-cost models for every technique (paper §2.2, §3).
 
+Since the discrete-event network layer (DESIGN.md §9) these closed
+forms are the cross-checked *oracles*: the ledger is fed from measured
+transport transcripts (``core/transport.py`` + ``runtime/network.py``),
+and ``tests/test_network.py`` pins transcript bytes equal to these
+formulas in the no-loss case for every registered technique.
+
 Byte accounting per FL iteration with ``n`` *aggregating* peers and model
 state of ``model_bytes`` (theta + momentum, both averaged by Alg. 1):
 
@@ -54,17 +60,47 @@ def pytree_bytes(tree: PyTree) -> int:
 
 def mar_bytes(n: int, plan: GridPlan, model_bytes: int,
               num_rounds: Optional[int] = None,
-              mode: str = "naive") -> int:
-    """Data-plane bytes for one MAR aggregation over ``n`` active peers."""
+              mode: str = "naive",
+              mask: Optional[np.ndarray] = None) -> int:
+    """Data-plane bytes for one MAR aggregation over ``n`` active peers.
+
+    Mask-aware: an active peer only exchanges with the *active* members
+    of its round-``g`` group — a churned mate receives no send. With
+    ``mask`` given the accounting is exact per group (``sum_g
+    k_g (k_g - 1)`` naive-mode sends), byte-identical to the transport
+    transcript in the no-loss case (``tests/test_network.py``). With
+    only the count ``n`` the per-group split is unknown, so the
+    active-pair expectation ``(n-1)/(N-1)`` scales the full-grid
+    formula (the old code billed every sender for ``M-1`` mates even
+    when the caller passed a churn-reduced ``n`` — overcounting sends
+    to dropped peers). At full participation both paths reduce to the
+    paper's ``n G (M-1) B``.
+    """
     rounds = plan.depth if num_rounds is None else num_rounds
     total = 0.0
+    if mask is not None:
+        mask = np.asarray(mask)[:plan.n_peers] > 0
+        for g in range(rounds):
+            for group in plan.groups_for_round(g % plan.depth):
+                real = group[group < plan.n_peers]
+                k = int(mask[real].sum())
+                if k < 2:
+                    continue
+                if mode == "butterfly":
+                    total += 2.0 * (k - 1) * model_bytes
+                else:
+                    total += k * (k - 1) * model_bytes
+        return int(total)
+    n_total = plan.n_peers
+    pair_frac = 1.0 if n >= n_total or n_total <= 1 else \
+        max(n - 1, 0) / (n_total - 1)
     for g in range(rounds):
         m = plan.dims[g % plan.depth]
         if mode == "butterfly":
             per_peer = 2.0 * (m - 1) / m
         else:
             per_peer = float(m - 1)
-        total += n * per_peer * model_bytes
+        total += n * per_peer * pair_frac * model_bytes
     return int(total)
 
 
@@ -72,15 +108,21 @@ def iteration_bytes(technique: str, n: int, model_bytes: int,
                     plan: Optional[GridPlan] = None,
                     num_rounds: Optional[int] = None,
                     use_kd: bool = False, kd_logit_bytes: int = 0,
-                    mode: str = "naive") -> int:
-    """Total data-plane bytes of one FL iteration."""
+                    mode: str = "naive",
+                    mask: Optional[np.ndarray] = None) -> int:
+    """Total data-plane bytes of one FL iteration.
+
+    ``mask`` (the aggregation mask A_t) makes the MAR entry exact per
+    group under churn; the other techniques' formulas depend only on
+    the active count ``n``.
+    """
     if technique == "fedavg":
         data = 2 * n * model_bytes
     elif technique in ("ar", "rdfl"):
         data = n * max(n - 1, 0) * model_bytes
     elif technique == "mar":
         assert plan is not None
-        data = mar_bytes(n, plan, model_bytes, num_rounds, mode)
+        data = mar_bytes(n, plan, model_bytes, num_rounds, mode, mask)
     elif technique == "gossip":
         rounds = (num_rounds if num_rounds is not None
                   else max(1, math.ceil(math.log2(max(n, 2)))))
@@ -93,7 +135,8 @@ def iteration_bytes(technique: str, n: int, model_bytes: int,
         raise ValueError(technique)
     if use_kd and technique == "mar":
         # students pull group-mates' thetas (half the (theta, m) state)
-        data += mar_bytes(n, plan, model_bytes // 2, num_rounds, "naive")
+        data += mar_bytes(n, plan, model_bytes // 2, num_rounds, "naive",
+                          mask)
         rounds = plan.depth if num_rounds is None else num_rounds
         data += n * rounds * kd_logit_bytes
     return int(data)

@@ -7,7 +7,12 @@ MAR-FL step, checkpoint/restart, and the churn-aware peer lifecycle
 (``runtime/lifecycle.py``): per-step participation masks come from a
 ``--churn`` scenario, measured step durations feed the
 ``HealthTracker`` heartbeats, and the per-iteration ``sweep()`` masks
-peers that stop heartbeating.
+peers that stop heartbeating. ``--link-profile`` adds the
+discrete-event network layer (``runtime/network.py``): aggregation
+traffic is unrolled into per-round messages, timed over modeled links,
+the ledger and per-step simulated wall-clock come from the measured
+transcript, and lossy links (``--link-loss``) demote peers whose sends
+were dropped to receiver-only for that step.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
@@ -71,6 +76,17 @@ def main(argv=None) -> int:
     ap.add_argument("--health-timeout", type=float, default=30.0,
                     help="iterations without a heartbeat before a peer "
                          "is marked dead")
+    ap.add_argument("--link-profile", default=None,
+                    choices=["uniform", "wireless", "regions"],
+                    help="discrete-event link model: aggregation "
+                         "traffic is unrolled into messages, timed "
+                         "over per-peer modeled links, and the ledger "
+                         "+ per-step simulated wall-clock come from "
+                         "the transcript (runtime/network.py)")
+    ap.add_argument("--link-loss", type=float, default=0.0,
+                    help="per-message loss probability on the modeled "
+                         "links; a peer whose send is lost mid-round "
+                         "is demoted to receiver-only for that step")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
@@ -125,8 +141,18 @@ def main(argv=None) -> int:
         health=HealthTracker(args.peers, timeout_s=args.health_timeout),
         straggler=StragglerPolicy())
     metrics_log = MetricsLogger(args.metrics)
+    network = None
+    if args.link_profile:
+        from repro.runtime.network import NetworkSim, demote_lost_senders
+        network = NetworkSim(
+            args.peers, profile=args.link_profile, seed=args.seed,
+            link_params={"loss": args.link_loss} if args.link_loss
+            else None)
+    # the mask-free fast path needs genuinely lossless links too: the
+    # regions profile carries per-tier loss even without --link-loss
     always_full = args.churn is None and args.participation >= 1.0 \
-        and args.dropout <= 0.0
+        and args.dropout <= 0.0 \
+        and (network is None or not network.links.loss.any())
 
     for t in range(start, start + args.steps):
         raw = next(stream)
@@ -142,6 +168,15 @@ def main(argv=None) -> int:
                 "permanent join/leave requires relaunch + "
                 "--resume (sim elastic regrouping: Federation.resize)")
         u, a = tick.u, tick.a
+        # modeled network: time this step's messages first so lost
+        # sends demote their peer before the aggregation runs
+        transcript = None
+        if network is not None:
+            n_act = int(a.sum())
+            mplan = pipeline.message_plan(np.asarray(a),
+                                          peer_model_bytes, n_act)
+            transcript = network.run(mplan)
+            a = demote_lost_senders(a, u, transcript)
         t0 = time.time()
         if always_full:
             state, metrics = step_fn(state, batch)
@@ -151,16 +186,32 @@ def main(argv=None) -> int:
             state, metrics = step_fn(state, batch, jnp.asarray(u),
                                      jnp.asarray(a))
         dt = time.time() - t0
-        pipeline.record_iteration(ledger, int(a.sum()), peer_model_bytes)
-        # heartbeat every peer that ran this step with its measured
-        # duration; silent peers age toward the sweep timeout
-        lifecycle.observe_durations(t, np.full(args.peers, dt), mask=u)
+        if transcript is not None:
+            pipeline.record_transcript(ledger, transcript, n_act,
+                                       peer_model_bytes)
+            # heartbeat with compute + each peer's simulated comm
+            # finish: slow modeled uplinks surface as stragglers via
+            # the lifecycle's deadline policy next iteration
+            lifecycle.observe_durations(
+                t, dt + transcript.peer_finish_s, mask=u)
+        else:
+            pipeline.record_iteration(ledger, int(a.sum()),
+                                      peer_model_bytes)
+            # heartbeat every peer that ran this step with its measured
+            # duration; silent peers age toward the sweep timeout
+            lifecycle.observe_durations(t, np.full(args.peers, dt),
+                                        mask=u)
         metrics_log.log(t + 1, tokens=args.peers * args.local_steps
                         * args.batch * args.seq,
+                        sim_s=(transcript.iteration_s
+                               if transcript is not None else None),
                         loss=float(metrics["loss"]))
         if (t + 1) % 5 == 0 or t == start:
+            sim = (f" sim={transcript.iteration_s*1e3:.0f}ms"
+                   if transcript is not None else "")
             print(f"  step {t+1:4d} loss={float(metrics['loss']):.4f} "
-                  f"({dt*1e3:.0f} ms) active={int(a.sum())}/{args.peers}")
+                  f"({dt*1e3:.0f} ms){sim} "
+                  f"active={int(a.sum())}/{args.peers}")
         if ckpt and (t + 1) % args.ckpt_every == 0:
             ckpt.save(t + 1, state,
                       metadata={"step": t + 1, "n_peers": args.peers,
@@ -177,7 +228,10 @@ def main(argv=None) -> int:
         print(f"[train] checkpointed at {start + args.steps}")
     per_source = " ".join(f"{k}={v/1e6:.1f}MB"
                           for k, v in ledger.by_source.items())
-    print(f"[train] comm total={ledger.total_bytes/1e6:.1f}MB {per_source}")
+    sim = (f" simulated={ledger.total_seconds:.2f}s"
+           f" ({args.link_profile})" if network is not None else "")
+    print(f"[train] comm total={ledger.total_bytes/1e6:.1f}MB "
+          f"{per_source}{sim}")
     if lifecycle.event_log:
         by_kind: dict = {}
         for e in lifecycle.event_log:

@@ -26,6 +26,11 @@ concern:
     :class:`~repro.runtime.fault.StragglerPolicy` deadline run their
     local update (U_t) but miss aggregation (A_t) — the paper's
     dropout semantics.
+  - ``link`` — deadline stragglers whose durations come from *modeled
+    link time*: per-peer uplink/latency are drawn from a
+    ``runtime/network.py`` link profile and each iteration costs
+    compute + simulated MAR send time, so a slow uplink — not an
+    abstract compute rate — is what misses the deadline.
   - ``trace`` — replayable event files (JSONL): record any run's
     membership events with :func:`save_trace`, replay them exactly.
 
@@ -358,6 +363,72 @@ class WirelessStragglerChurn(ChurnModel):
 
 
 @register_churn
+class LinkStragglerChurn(ChurnModel):
+    """Deadline stragglers driven by *modeled link time* (DESIGN.md §9).
+
+    Where :class:`WirelessStragglerChurn` draws abstract compute rates,
+    this model binds the straggler semantics to the discrete-event
+    network layer: each peer's per-iteration duration is its local
+    compute time plus the simulated cost of its MAR sends — ``rounds``
+    rounds of ``(group_size - 1)`` model transfers serialized over the
+    peer's own modeled uplink, plus propagation latency — drawn from a
+    ``runtime/network.py`` link profile. A peer misses its group
+    deadline *because its simulated uplink is slow*, the paper §3.1
+    "update done, aggregation missed" dropout, now with a physical
+    cause. Share ``profile``/``link_params``/``seed`` with the
+    federation's ``NetworkSim`` to keep the straggler process and the
+    transcript on the same links.
+    """
+
+    name = "link"
+
+    def __init__(self, n_peers: int, seed: int = 0,
+                 profile: str = "wireless", model_bytes: float = 4e6,
+                 group_size: int = 4, rounds: int = 3,
+                 compute_s: float = 0.5, jitter: float = 0.2,
+                 link_params: Optional[Dict[str, Any]] = None,
+                 policy: Optional[StragglerPolicy] = None):
+        from repro.runtime.network import build_link_model
+        super().__init__(n_peers, seed)
+        self.links = build_link_model(profile, n_peers, seed=seed,
+                                      **(link_params or {}))
+        self.model_bytes = model_bytes
+        self.group_size = group_size
+        self.rounds = rounds
+        self.compute_s = compute_s
+        self.jitter = jitter
+        # lognormal link tails are one-sided: median + 2*MAD keeps the
+        # bulk while cutting the slow-uplink tail every iteration
+        self.policy = policy or StragglerPolicy(k_std=2.0,
+                                                min_deadline_s=0.0)
+        self._rng = np.random.default_rng(seed * 12553 + 19)
+
+    def comm_s(self) -> np.ndarray:
+        """Deterministic per-peer aggregation cost on the modeled links:
+        uplink serialization of the round sends + per-round latency."""
+        sends = max(self.group_size - 1, 0) * self.model_bytes
+        return self.rounds * (sends / self.links.up
+                              + 2.0 * self.links.lat)
+
+    def tick(self, t: int) -> ChurnTick:
+        compute = self.compute_s * np.exp(
+            self._rng.normal(0.0, self.jitter, self.n_peers))
+        dur = compute + self.comm_s()
+        a = self.policy.mask(dur)
+        u = np.ones(self.n_peers, np.float32)
+        events = []
+        stragglers = np.flatnonzero(a == 0.0)
+        if stragglers.size:
+            events.append(MembershipEvent(t, STRAGGLE, tuple(stragglers)))
+        return ChurnTick(u, a.astype(np.float32), durations=dur,
+                         events=events)
+
+    def resize(self, new_n: int) -> None:
+        self.links.resize(new_n)   # survivors keep their links
+        self.n_peers = new_n
+
+
+@register_churn
 class TraceChurn(ChurnModel):
     """Replay a recorded membership-event stream (JSONL).
 
@@ -536,7 +607,8 @@ class PeerLifecycle:
         # 4) deadline policy on reported durations (when the model did
         #    not already apply one)
         if (self.straggler is not None and ct.durations is not None
-                and not isinstance(self.model, WirelessStragglerChurn)):
+                and not isinstance(self.model, (WirelessStragglerChurn,
+                                                LinkStragglerChurn))):
             sm = self.straggler.mask(ct.durations)
             cut = np.flatnonzero((a > 0) & (sm == 0))
             if cut.size:
@@ -623,7 +695,7 @@ def build_lifecycle(churn: Optional[str], n_peers: int, *, seed: int = 0,
     if name == "bernoulli":
         params.setdefault("participation_rate", participation_rate)
         params.setdefault("dropout_rate", dropout_rate)
-    if name == "wireless" and straggler is not None:
+    if name in ("wireless", "link") and straggler is not None:
         # the caller's deadline policy governs the simulated stragglers
         params.setdefault("policy", straggler)
     model = build_churn_model(name, n_peers, seed=seed, **params)

@@ -3,6 +3,12 @@
 Append-only JSONL (one record per log call) so concurrent tails,
 crashes, and elastic restarts never corrupt history — the restart
 appends with a new ``run_id`` and the reader reconciles by step.
+
+Alongside measured wall time (``wall_s``/``step_ms``), the logger
+tracks *simulated* network wall-clock: pass ``sim_s`` (one iteration's
+``Transcript.iteration_s`` from ``runtime/network.py``) and each record
+carries the per-step value plus the cumulative ``sim_total_s`` — the
+time axis the wall-clock scaling benchmarks report.
 """
 from __future__ import annotations
 
@@ -21,10 +27,12 @@ class MetricsLogger:
         self._t0 = time.time()
         self._durations = deque(maxlen=window)
         self._last: Optional[float] = None
+        self.sim_total_s = 0.0
         if path:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
 
     def log(self, step: int, tokens: Optional[int] = None,
+            sim_s: Optional[float] = None,
             **metrics: Any) -> Dict[str, Any]:
         now = time.time()
         if self._last is not None:
@@ -34,6 +42,10 @@ class MetricsLogger:
             "run_id": self.run_id, "step": int(step),
             "wall_s": round(now - self._t0, 3),
         }
+        if sim_s is not None:
+            self.sim_total_s += float(sim_s)
+            rec["sim_s"] = round(float(sim_s), 6)
+            rec["sim_total_s"] = round(self.sim_total_s, 6)
         if self._durations:
             avg = sum(self._durations) / len(self._durations)
             rec["step_ms"] = round(avg * 1e3, 1)

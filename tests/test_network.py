@@ -1,0 +1,298 @@
+"""Discrete-event network layer: transport plans, link models, and the
+transcript-vs-analytic parity contract (ISSUE 3 acceptance).
+
+The closed-form byte models in ``core/topology.py`` are *oracles* now:
+the ledger is fed from measured transcripts, and this suite pins the
+two to each other in the no-loss case — for every registered technique,
+at several peer counts, under full participation (and, for the
+mask-aware MAR model, under churn masks too).
+"""
+import numpy as np
+import pytest
+
+from repro.core import topology, transport
+from repro.core.aggregation import (AggregationPipeline, Int8EFStage,
+                                    MarAggregator, TECHNIQUES,
+                                    make_aggregator)
+from repro.core.federation import Federation, FederationConfig
+from repro.core.moshpit import plan_grid
+from repro.runtime.lifecycle import build_churn_model
+from repro.runtime.network import (LINK_MODELS, NetworkSim,
+                                   build_link_model)
+
+MB = 10_000   # model-state bytes per transfer (small, exact in float)
+
+
+# ---------------------------------------------------------------------------
+# transcript-vs-analytic parity (the acceptance property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [8, 16, 27, 64])
+@pytest.mark.parametrize("tech", sorted(TECHNIQUES))
+def test_transcript_matches_analytic_full_participation(tech, n):
+    """loss=0, full participation: NetworkSim measured bytes equal
+    topology.iteration_bytes for every registered technique."""
+    plan = plan_grid(n)
+    agg = make_aggregator(tech, plan)
+    mplan = agg.message_plan(np.ones(n, np.float32), MB)
+    tr = NetworkSim(n, profile="uniform", seed=0).run(mplan)
+    analytic = topology.iteration_bytes(tech, n, MB, plan,
+                                        num_rounds=agg.num_rounds)
+    assert tr.total_bytes == pytest.approx(analytic)
+    assert tr.n_dropped == 0
+    assert tr.iteration_s > 0.0
+
+
+@pytest.mark.parametrize("n", [16, 27, 64])
+def test_mar_mask_aware_parity_under_churn(n):
+    """The mask-aware topology.mar_bytes fix: exact per-group analytic
+    accounting equals the transcript for arbitrary churn masks."""
+    plan = plan_grid(n)
+    agg = make_aggregator("mar", plan)
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        mask = (rng.random(n) < 0.6).astype(np.float32)
+        tr = NetworkSim(n, profile="uniform", seed=0).run(
+            agg.message_plan(mask, MB))
+        analytic = topology.iteration_bytes(
+            "mar", int(mask.sum()), MB, plan, mask=mask)
+        assert tr.total_bytes == pytest.approx(analytic)
+
+
+def test_mar_bytes_countonly_no_longer_overbills():
+    """Regression (satellite): with a churn-reduced active count the
+    count-only formula must not bill senders for dropped group mates;
+    it now scales by the active-pair fraction and upper-bounds at the
+    full-participation constant."""
+    plan = plan_grid(27)
+    full = topology.mar_bytes(27, plan, MB)
+    half = topology.mar_bytes(14, plan, MB)
+    old_half = 14 * 2 * 3 * MB          # 14 senders x (M-1) x G rounds
+    assert full == 27 * 2 * 3 * MB      # paper constant unchanged
+    assert half < old_half              # the fix: fewer active pairs
+    assert half == pytest.approx(old_half * 13 / 26, rel=0.01)
+
+
+def test_mar_mask_parity_padded_grid():
+    """Non-exact grids (capacity > N) pad with virtual slots; the
+    mask-aware analytic and the transcript agree there too."""
+    plan = plan_grid(10)                 # 4x4 capacity over 10 peers
+    assert plan.capacity > plan.n_peers
+    mask = np.ones(10, np.float32)
+    agg = make_aggregator("mar", plan)
+    tr = NetworkSim(10, profile="uniform", seed=0).run(
+        agg.message_plan(mask, MB))
+    analytic = topology.iteration_bytes("mar", 10, MB, plan, mask=mask)
+    assert tr.total_bytes == pytest.approx(analytic)
+
+
+def test_compression_shrinks_time_and_bytes():
+    plan = plan_grid(16)
+    plain = AggregationPipeline(MarAggregator(plan))
+    comp = AggregationPipeline(MarAggregator(plan), [Int8EFStage()])
+    mask = np.ones(16, np.float32)
+    t_plain = NetworkSim(16, "wireless", seed=1).run(
+        plain.message_plan(mask, MB, 16))
+    t_comp = NetworkSim(16, "wireless", seed=1).run(
+        comp.message_plan(mask, MB, 16))
+    assert t_comp.total_bytes == pytest.approx(t_plain.total_bytes / 4)
+    assert t_comp.iteration_s < t_plain.iteration_s
+
+
+# ---------------------------------------------------------------------------
+# link models
+# ---------------------------------------------------------------------------
+
+def test_link_registry_and_unknown_profile():
+    assert {"uniform", "wireless", "regions"} <= set(LINK_MODELS)
+    with pytest.raises(ValueError, match="unknown link profile"):
+        build_link_model("dialup", 8)
+
+
+def test_wireless_links_heterogeneous_and_deterministic():
+    a = build_link_model("wireless", 32, seed=3)
+    b = build_link_model("wireless", 32, seed=3)
+    np.testing.assert_array_equal(a.up, b.up)
+    assert a.up.std() > 0 and a.lat.std() > 0
+    c = build_link_model("wireless", 32, seed=4)
+    assert not np.array_equal(a.up, c.up)
+
+
+def test_region_links_tiered():
+    m = build_link_model("regions", 12, seed=0, n_regions=3, jitter=0.0)
+    region = m.region_of()
+    assert set(region) == {0, 1, 2}
+    # within a region links are identical (jitter 0); tiers differ
+    for r in range(3):
+        assert np.allclose(m.up[region == r], m.up[region == r][0])
+    assert m.up[0] != m.up[-1]
+
+
+def test_link_resize_keeps_survivors():
+    m = build_link_model("wireless", 16, seed=5)
+    up8 = m.up[:8].copy()
+    m.resize(8)
+    np.testing.assert_array_equal(m.up, up8)
+    m.resize(16)
+    np.testing.assert_array_equal(m.up[:8], up8)
+    assert len(m.up) == 16
+
+
+# ---------------------------------------------------------------------------
+# the event-driven simulator
+# ---------------------------------------------------------------------------
+
+def test_sim_deterministic_and_clock_accumulates():
+    plan = plan_grid(16)
+    mplan = make_aggregator("mar", plan).message_plan(
+        np.ones(16, np.float32), MB)
+    net = NetworkSim(16, "wireless", seed=7)
+    t1 = net.run(mplan)
+    assert net.clock == pytest.approx(t1.iteration_s)
+    net.run(mplan)
+    assert net.clock > t1.iteration_s
+    # an identically-seeded sim replays the first iteration exactly
+    t1b = NetworkSim(16, "wireless", seed=7).run(mplan)
+    assert t1b.iteration_s == pytest.approx(t1.iteration_s)
+    assert t1b.round_s == pytest.approx(t1.round_s)
+
+
+def test_slow_uplink_dominates_finish_time():
+    """A 100x slower uplink shows up in that peer's finish time — the
+    signal the lifecycle's deadline policy cuts on."""
+    plan = plan_grid(8)
+    mplan = make_aggregator("mar", plan).message_plan(
+        np.ones(8, np.float32), 10_000_000)
+    base = NetworkSim(8, "uniform", seed=0).run(mplan)
+    links = build_link_model("uniform", 8, seed=0)
+    links.up[3] /= 100.0
+    tr = NetworkSim(8, links=links).run(mplan)
+    # peer 3's serialized slow sends dominate its own finish, its group
+    # mates finish just after it, and the whole iteration slows >20x
+    assert tr.peer_finish_s.max() == pytest.approx(
+        tr.peer_finish_s[3], rel=0.05)
+    assert tr.iteration_s > 20 * base.iteration_s
+
+
+def test_lossy_links_drop_and_flag_senders():
+    plan = plan_grid(16)
+    mplan = make_aggregator("mar", plan).message_plan(
+        np.ones(16, np.float32), MB)
+    tr = NetworkSim(16, "uniform", seed=2,
+                    link_params={"loss": 0.5}).run(mplan)
+    assert tr.n_dropped > 0
+    assert tr.lost_senders.any()
+    # lost messages consumed airtime: bytes are billed as transmitted
+    assert tr.total_bytes == pytest.approx(mplan.total_bytes)
+    # dropped messages' senders are exactly the flagged ones
+    assert ({m.src for m in tr.dropped}
+            == set(np.flatnonzero(tr.lost_senders)))
+
+
+def test_compute_seeds_finish_times():
+    plan = plan_grid(8)
+    mplan = make_aggregator("mar", plan).message_plan(
+        np.ones(8, np.float32), MB)
+    slow = np.zeros(8)
+    slow[5] = 100.0
+    tr = NetworkSim(8, "uniform", seed=0).run(mplan, compute_s=slow)
+    assert tr.iteration_s > 100.0
+
+
+def test_infrastructure_nodes_are_free():
+    """FedAvg's server (node id >= n) is infinitely provisioned: the
+    transfer is bounded by client links only."""
+    plan = plan_grid(8)
+    mplan = transport.fedavg_plan(plan, np.ones(8, np.float32), MB)
+    assert mplan.n_nodes == 9
+    tr = NetworkSim(8, "uniform", seed=0).run(mplan)
+    links = build_link_model("uniform", 8)
+    expect = 2 * (MB / links.up[0] + links.lat[0])   # up + down, serial
+    assert tr.iteration_s == pytest.approx(expect, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the wall-clock scaling claim (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_mar_wallclock_sublinear_ar_linear():
+    """On the same lognormal-wireless links, MAR's per-iteration
+    simulated seconds grow ~log N while AR's grow ~N."""
+    secs = {}
+    for n in (8, 64):
+        plan = plan_grid(n)
+        mask = np.ones(n, np.float32)
+        for tech in ("mar", "ar"):
+            mplan = make_aggregator(tech, plan).message_plan(mask, 1e6)
+            secs[(tech, n)] = NetworkSim(
+                n, "wireless", seed=0).run(mplan).iteration_s
+    mar_growth = secs[("mar", 64)] / secs[("mar", 8)]
+    ar_growth = secs[("ar", 64)] / secs[("ar", 8)]
+    assert secs[("mar", 64)] < secs[("ar", 64)]
+    assert ar_growth > 0.8 * (64 / 8)          # ~linear in N
+    assert mar_growth < 0.5 * (64 / 8)         # clearly sub-linear
+    assert mar_growth < ar_growth / 2
+
+
+# ---------------------------------------------------------------------------
+# federation + lifecycle integration
+# ---------------------------------------------------------------------------
+
+def test_federation_ledger_fed_from_transcript():
+    cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                           link_profile="wireless", seed=3)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    for _ in range(2):
+        state = fed.step(state)
+    # parity: full participation, no loss — measured equals analytic
+    analytic = 2 * topology.iteration_bytes("mar", 8, fed.model_bytes,
+                                            fed.plan)
+    assert fed.comm_bytes == pytest.approx(analytic)
+    assert fed.sim_seconds > 0.0
+    assert fed.ledger.total_seconds == pytest.approx(fed.sim_seconds)
+    assert fed.last_transcript is not None
+    assert fed.last_transcript.n_messages == 24   # 3 rounds x 8 x (2-1)
+
+
+def test_federation_lossy_links_demote_and_train():
+    import jax
+    import jax.numpy as jnp
+    cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                           link_profile="wireless",
+                           link_params={"loss": 0.4}, seed=4)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    for _ in range(3):
+        state = fed.step(state)
+    assert fed.last_transcript.n_dropped > 0
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_link_churn_model_cuts_slow_uplinks():
+    """The lifecycle's link-bound straggler model: the deadline is
+    missed *because* the modeled uplink is slow."""
+    model = build_churn_model("link", 32, seed=1, profile="wireless",
+                              model_bytes=2e6, jitter=0.05)
+    tick = model.tick(0)
+    assert tick.durations is not None
+    stragglers = np.flatnonzero(tick.a == 0)
+    assert stragglers.size > 0
+    # every straggler's link-time exceeds the median peer's
+    comm = model.comm_s()
+    assert (comm[stragglers] > np.median(comm)).all()
+
+
+def test_federation_link_churn_end_to_end():
+    cfg = FederationConfig(
+        n_peers=16, technique="mar", task="text", churn="link",
+        churn_params=dict(profile="wireless", model_bytes=2e6), seed=2)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    for _ in range(3):
+        state = fed.step(state)
+    from repro.runtime.lifecycle import STRAGGLE
+    kinds = {e.kind for e in fed.lifecycle.event_log}
+    assert STRAGGLE in kinds
+    assert fed.comm_bytes > 0
