@@ -1,0 +1,121 @@
+"""Sim-vs-real transport calibration: same plans, both backends.
+
+The communication-practicality surveys (PAPERS.md: Le et al.; Shahid et
+al.) warn that simulated FL traffic routinely diverges from deployed
+traffic. The pluggable transport seam (``runtime/transport_base.py``)
+makes that divergence measurable: this benchmark executes the *same*
+per-round MessagePlan of every registered aggregation technique on the
+discrete-event simulator and on real asyncio loopback TCP sockets, then
+compares the two transcripts.
+
+Contract (asserted): the no-loss transcripts are **byte-exact** — same
+``total_bytes``, same per-round split, same per-link split — for every
+technique at every peer count, including a MAR+MKD plan (distillation
+prefix rounds) and an int8-compressed wire ladder. Wall-clock is
+**reported, not asserted**: the simulator's seconds come from modeled
+links, the socket backend's from actual loopback transmission of real
+int8-serialized tensors, and the ratio between them is the calibration
+signal (EXPERIMENTS.md §Sim-vs-real calibration).
+
+Exit status is non-zero on any byte mismatch, so CI can gate on it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, std_argparser
+from repro.core import topology
+from repro.core.aggregation import TECHNIQUES, build_pipeline
+from repro.core.moshpit import plan_grid
+from repro.runtime.socket_transport import encode_state_payloads
+from repro.runtime.transport_base import build_transport
+
+ORDER = ("fedavg", "hierarchical", "mar", "gossip", "rdfl", "ar")
+
+
+def _transcripts(mplan, n, seed, payloads=None):
+    sim = build_transport("sim", n, profile="uniform", seed=seed)
+    sock = build_transport("socket", n, seed=seed)
+    return sim.run(mplan), sock.run(mplan, payloads=payloads)
+
+
+def main(argv=None) -> int:
+    ap = std_argparser(__doc__)
+    ap.add_argument("--model-kb", type=float, default=64.0,
+                    help="state bytes per transfer, in KB")
+    args = ap.parse_args(argv)
+
+    peer_counts = (4,) if args.smoke else (4, 8)
+    if args.full:
+        peer_counts = (4, 8, 16)
+    model_bytes = int(args.model_kb * 1000)
+
+    techniques = [t for t in ORDER if t in TECHNIQUES] + \
+        sorted(set(TECHNIQUES) - set(ORDER))
+    failures = 0
+    for n in peer_counts:
+        plan = plan_grid(n)
+        mask = np.ones(n, np.float32)
+        # real tensors on the wire: a synthetic peer-stacked update,
+        # int8-serialized exactly like the federation's socket path
+        rng = np.random.default_rng(args.seed)
+        payloads = encode_state_payloads(
+            {"w": rng.normal(size=(n, 256, 16)).astype(np.float32)})
+        for tech in techniques:
+            pipe = build_pipeline(tech, plan)
+            mplan = pipe.message_plan(mask, model_bytes, n)
+            tr_sim, tr_sock = _transcripts(mplan, n, args.seed, payloads)
+            exact = (tr_sock.total_bytes == tr_sim.total_bytes
+                     and tr_sock.bytes_by_round == tr_sim.bytes_by_round
+                     and tr_sock.bytes_by_link == tr_sim.bytes_by_link)
+            failures += not exact
+            emit("transport_calibration", technique=tech, n_peers=n,
+                 messages=mplan.n_messages,
+                 bytes_sim=int(tr_sim.total_bytes),
+                 bytes_socket=int(tr_sock.total_bytes),
+                 byte_exact=exact,
+                 payload_bytes=int(tr_sock.payload_bytes),
+                 sim_s=round(tr_sim.iteration_s, 6),
+                 wall_s=round(tr_sock.iteration_s, 6),
+                 wall_over_sim=round(
+                     tr_sock.iteration_s / max(tr_sim.iteration_s, 1e-12),
+                     3))
+
+        # MKD prefix rounds ride the same transports
+        pipe = build_pipeline("mar", plan)
+        mplan = pipe.message_plan(mask, model_bytes, n, use_kd=True,
+                                  kd_logit_bytes=1024)
+        tr_sim, tr_sock = _transcripts(mplan, n, args.seed, payloads)
+        kd_exact = (tr_sock.total_bytes == tr_sim.total_bytes
+                    and tr_sock.kd_bytes == tr_sim.kd_bytes)
+        failures += not kd_exact
+        emit("transport_calibration", technique="mar+kd", n_peers=n,
+             messages=mplan.n_messages,
+             bytes_sim=int(tr_sim.total_bytes),
+             bytes_socket=int(tr_sock.total_bytes),
+             kd_bytes=int(tr_sock.kd_bytes), byte_exact=kd_exact,
+             sim_s=round(tr_sim.iteration_s, 6),
+             wall_s=round(tr_sock.iteration_s, 6))
+
+        # compressed wire sizes shrink both backends identically
+        pipe = build_pipeline("mar", plan, compress="int8_ef")
+        mplan = pipe.message_plan(mask, model_bytes, n)
+        tr_sim, tr_sock = _transcripts(mplan, n, args.seed, payloads)
+        c_exact = tr_sock.total_bytes == tr_sim.total_bytes
+        failures += not c_exact
+        emit("transport_calibration", technique="mar+int8_ef", n_peers=n,
+             bytes_sim=int(tr_sim.total_bytes),
+             bytes_socket=int(tr_sock.total_bytes), byte_exact=c_exact,
+             analytic=int(topology.iteration_bytes(
+                 "mar", n, model_bytes, plan) / 4),
+             sim_s=round(tr_sim.iteration_s, 6),
+             wall_s=round(tr_sock.iteration_s, 6))
+
+    emit("transport_calibration", summary=True,
+         peer_counts=str(peer_counts), byte_mismatches=failures)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

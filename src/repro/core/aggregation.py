@@ -578,27 +578,45 @@ class AggregationPipeline:
         return b
 
     def message_plan(self, mask: Optional[Any], model_bytes: float,
-                     n_active: int) -> Any:
-        """The aggregator's message plan at post-stage wire sizes."""
-        return self.aggregator.message_plan(
+                     n_active: int, use_kd: bool = False,
+                     kd_logit_bytes: float = 0) -> Any:
+        """The aggregator's message plan at post-stage wire sizes.
+
+        With ``use_kd`` the iteration's MKD rounds (teacher pulls +
+        logit exchanges over the same MAR groups) are prepended at
+        *raw* sizes — distillation doesn't ride the compressed delta
+        wire format — so KD bytes move (and, on real transports, are
+        transmitted) through whichever backend is active instead of
+        being analytic add-ons.
+        """
+        mp = self.aggregator.message_plan(
             mask, self.wire_model_bytes(model_bytes, n_active))
+        if use_kd and self.aggregator.name == "mar":
+            from repro.core import transport
+            mp = transport.with_mkd_traffic(
+                mp, self.aggregator.plan, mask, model_bytes,
+                kd_logit_bytes, num_rounds=self.aggregator.num_rounds)
+        return mp
 
     def record_transcript(self, ledger: CommLedger, transcript: Any,
                           n_active: int, model_bytes: int,
                           use_kd: bool = False,
                           kd_logit_bytes: int = 0) -> float:
-        """Record one FL iteration from a measured network transcript
-        (``runtime/network.py``) — bytes as transmitted (lost messages
-        consumed airtime and are billed) plus simulated seconds. KD
-        traffic stays analytic and untransformed, exactly as in
-        :meth:`record_iteration`: distillation exchanges don't ride the
-        compressed delta wire format (and aren't network-scheduled yet
-        — ROADMAP open item)."""
+        """Record one FL iteration from a measured transport transcript
+        (``runtime/transport_base.py``) — bytes as transmitted (lost
+        messages consumed airtime and are billed) plus seconds. KD
+        traffic is split out of the transcript via the plan's MKD
+        prefix rounds (``Transcript.kd_bytes``); the analytic KD add-on
+        remains only as a fallback for transcripts of plans built
+        without :meth:`message_plan`'s ``use_kd`` path."""
+        kd_measured = getattr(transcript, "kd_bytes", 0.0)
         ledger.record(f"agg/{self.aggregator.name}",
-                      transcript.total_bytes)
+                      transcript.total_bytes - kd_measured)
         ledger.record_time(transcript.iteration_s)
         total = transcript.total_bytes
-        if use_kd:
+        if kd_measured:
+            ledger.record("kd", kd_measured)
+        elif use_kd:
             kd = self.aggregator.kd_bytes(n_active, model_bytes,
                                           kd_logit_bytes)
             if kd:

@@ -122,6 +122,14 @@ class FederationConfig:
     # that aggregation (paper §3.1 churn semantics).
     link_profile: Optional[str] = None
     link_params: Optional[Dict[str, Any]] = None
+    # transport backend executing the per-step message plans
+    # (runtime/transport_base.py): "sim" models them over the link
+    # profile above; "socket" runs every peer as an asyncio task on
+    # loopback TCP and really transmits int8-serialized update tensors
+    # — identical transcript shape, so the ledger, churn demotion and
+    # history are backend-agnostic (link_profile/link_params apply to
+    # "sim" only; "socket" keeps just the loss rate as injection).
+    transport: str = "sim"
     seed: int = 0
 
     def grid(self) -> GridPlan:
@@ -162,33 +170,37 @@ class FederationState:
 
 class Federation:
     """Owns the task data, the jitted iteration fn, the aggregation
-    pipeline, the discrete-event network sim, and the comm ledger.
+    pipeline, the transport backend, and the comm ledger.
 
     Communication accounting is *measured*: each step unrolls the
-    aggregation into a message plan (``core/transport.py``), the
-    :class:`~repro.runtime.network.NetworkSim` times (and, under lossy
-    profiles, drops) every message over per-peer modeled links, and the
-    transcript feeds the ledger — bytes and simulated wall-clock
-    seconds. ``cfg.link_profile`` picks the link model ("uniform"
-    lossless default, "wireless" lognormal heterogeneity, "regions"
-    tiered blocks); lost sends demote their peer to receiver-only for
-    the iteration (DESIGN.md §9).
+    aggregation (plus any MKD rounds) into a message plan
+    (``core/transport.py``) and hands it to the pluggable
+    :class:`~repro.runtime.transport_base.Transport`
+    (``cfg.transport``): the ``"sim"`` backend times — and, under lossy
+    profiles, drops — every message over per-peer modeled links
+    (``cfg.link_profile``: "uniform" lossless default, "wireless"
+    lognormal heterogeneity, "regions" tiered blocks); the ``"socket"``
+    backend really transmits int8-serialized update tensors between
+    asyncio peer tasks on loopback TCP. Either way the transcript feeds
+    the ledger — bytes plus (simulated or wall-clock) seconds — and
+    lost sends demote their peer to receiver-only for the iteration
+    (DESIGN.md §9-§10).
     """
 
     def __init__(self, cfg: FederationConfig,
                  lifecycle: Optional["PeerLifecycle"] = None):
         from repro.runtime.lifecycle import build_lifecycle
-        from repro.runtime.network import NetworkSim
+        from repro.runtime.transport_base import build_transport
         if cfg.technique not in TECHNIQUES:
             raise ValueError(cfg.technique)
         self.cfg = cfg
         self.plan = cfg.grid()
         self.pipeline = self._build_pipeline(cfg, self.plan)
         self.ledger = CommLedger()
-        self.network = NetworkSim(cfg.n_peers,
-                                  profile=cfg.link_profile or "uniform",
-                                  seed=cfg.seed,
-                                  link_params=cfg.link_params)
+        self.network = build_transport(cfg.transport, cfg.n_peers,
+                                       profile=cfg.link_profile,
+                                       seed=cfg.seed,
+                                       link_params=cfg.link_params)
         self.last_transcript = None
         self.lifecycle = lifecycle if lifecycle is not None else \
             build_lifecycle(cfg.churn, cfg.n_peers, seed=cfg.seed,
@@ -258,7 +270,8 @@ class Federation:
 
     @property
     def sim_seconds(self) -> float:
-        """Cumulative simulated communication wall-clock (NetworkSim)."""
+        """Cumulative communication seconds from the transport backend
+        (simulated for ``"sim"``, measured wall-clock for ``"socket"``)."""
         return self.network.clock
 
     # ------------------------------------------------------------------
@@ -422,16 +435,24 @@ class Federation:
         use_kd = cfg.use_kd and state.iteration < cfg.kd_iterations
         kd_lambda = max(0.0, 1.0 - state.iteration / max(cfg.kd_iterations, 1))
 
-        # simulate this iteration's traffic *before* aggregating: the
-        # transcript both feeds the ledger (measured bytes + simulated
-        # seconds replace the analytic formulas) and, under lossy link
-        # profiles, demotes peers whose sends were lost mid-round to
-        # receiver-only (paper §3.1 — they rejoin with the group mean)
-        from repro.runtime.network import demote_lost_senders
+        # run this iteration's traffic *before* aggregating: the
+        # transport backend (modeled links or real loopback sockets)
+        # produces the transcript that feeds the ledger, and, under
+        # loss, demotes peers whose sends were dropped mid-round to
+        # receiver-only (paper §3.1 — they rejoin with the group mean).
+        # MKD rounds ride the same plan, so distillation bytes cross
+        # whichever transport is active.
+        from repro.runtime.transport_base import demote_lost_senders
         n_active = int(a.sum())
-        mplan = self.pipeline.message_plan(np.asarray(a),
-                                           self.model_bytes, n_active)
-        transcript = self.network.run(mplan)
+        mplan = self.pipeline.message_plan(
+            np.asarray(a), self.model_bytes, n_active, use_kd=use_kd,
+            kd_logit_bytes=self._kd_logit_bytes() if use_kd else 0)
+        payloads = None
+        if self.network.wants_payloads:
+            from repro.runtime.socket_transport import \
+                encode_state_payloads
+            payloads = encode_state_payloads(state.params)
+        transcript = self.network.run(mplan, payloads=payloads)
         self.last_transcript = transcript
         a = demote_lost_senders(a, u, transcript)
 

@@ -104,6 +104,35 @@ def mar_bytes(n: int, plan: GridPlan, model_bytes: int,
     return int(total)
 
 
+def hierarchical_bytes(n: int, plan: GridPlan, model_bytes: int,
+                       mask: Optional[np.ndarray] = None) -> int:
+    """Two-tier FedAvg bytes: ``2 (n + #groups) B``.
+
+    The measured transcript bills the leaf groups that are *actually
+    nonempty* under the churn mask (an active member anywhere keeps its
+    group's leader <-> rendezvous hop alive). With ``mask`` given the
+    count is exact — byte-identical to the transport transcript. With
+    only the active count ``n`` the per-group split is unknown, and no
+    count-only formula can be exact: ``ceil(n / M)`` is the *minimum*
+    possible nonempty-group count (actives packed into as few leaf
+    groups as possible), so the count-only path is a documented lower
+    bound on the measured bytes — pinned by the inequality test in
+    ``tests/test_transport.py``. At full participation both paths
+    coincide (every group nonempty, ``ceil(N / M)`` of them).
+    """
+    if mask is not None:
+        active = np.asarray(mask)[:plan.n_peers] > 0
+        n_act, n_groups = 0, 0
+        for group in plan.groups_for_round(plan.depth - 1):
+            k = int(active[group[group < plan.n_peers]].sum())
+            if k:
+                n_groups += 1
+                n_act += k
+        return int(2 * (n_act + n_groups) * model_bytes)
+    n_groups = max(1, math.ceil(n / plan.dims[-1]))
+    return int(2 * (n + n_groups) * model_bytes)
+
+
 def iteration_bytes(technique: str, n: int, model_bytes: int,
                     plan: Optional[GridPlan] = None,
                     num_rounds: Optional[int] = None,
@@ -112,9 +141,9 @@ def iteration_bytes(technique: str, n: int, model_bytes: int,
                     mask: Optional[np.ndarray] = None) -> int:
     """Total data-plane bytes of one FL iteration.
 
-    ``mask`` (the aggregation mask A_t) makes the MAR entry exact per
-    group under churn; the other techniques' formulas depend only on
-    the active count ``n``.
+    ``mask`` (the aggregation mask A_t) makes the MAR and hierarchical
+    entries exact per group under churn; the remaining techniques'
+    formulas depend only on the active count ``n``.
     """
     if technique == "fedavg":
         data = 2 * n * model_bytes
@@ -129,8 +158,7 @@ def iteration_bytes(technique: str, n: int, model_bytes: int,
         data = rounds * n * model_bytes
     elif technique == "hierarchical":
         assert plan is not None
-        n_groups = max(1, math.ceil(n / plan.dims[-1]))
-        data = 2 * (n + n_groups) * model_bytes
+        data = hierarchical_bytes(n, plan, model_bytes, mask)
     else:
         raise ValueError(technique)
     if use_kd and technique == "mar":

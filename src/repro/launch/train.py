@@ -7,12 +7,15 @@ MAR-FL step, checkpoint/restart, and the churn-aware peer lifecycle
 (``runtime/lifecycle.py``): per-step participation masks come from a
 ``--churn`` scenario, measured step durations feed the
 ``HealthTracker`` heartbeats, and the per-iteration ``sweep()`` masks
-peers that stop heartbeating. ``--link-profile`` adds the
-discrete-event network layer (``runtime/network.py``): aggregation
-traffic is unrolled into per-round messages, timed over modeled links,
-the ledger and per-step simulated wall-clock come from the measured
-transcript, and lossy links (``--link-loss``) demote peers whose sends
-were dropped to receiver-only for that step.
+peers that stop heartbeating. ``--transport`` picks the
+MessagePlan executor (``runtime/transport_base.py``): ``sim`` unrolls
+aggregation traffic into per-round messages and times them over
+``--link-profile`` modeled links; ``socket`` runs every peer as an
+asyncio task on loopback TCP and really transmits int8-serialized
+update tensors. Either way the ledger and per-step communication
+seconds come from the measured transcript, and lost sends
+(``--link-loss`` — modeled drops on sim, injected failures on socket)
+demote their peer to receiver-only for that step.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
@@ -21,6 +24,8 @@ Examples:
       --steps 10 --resume --ckpt-dir /tmp/ck
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
       --smoke --steps 10 --peers 4 --churn sessions
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+      --smoke --steps 3 --peers 4 --transport socket
 """
 from __future__ import annotations
 
@@ -76,17 +81,30 @@ def main(argv=None) -> int:
     ap.add_argument("--health-timeout", type=float, default=30.0,
                     help="iterations without a heartbeat before a peer "
                          "is marked dead")
+    ap.add_argument("--transport", default=None,
+                    choices=["sim", "socket"],
+                    help="MessagePlan executor backend "
+                         "(runtime/transport_base.py): 'sim' models "
+                         "messages over --link-profile links; 'socket' "
+                         "runs every peer as an asyncio task on "
+                         "loopback TCP and really transmits "
+                         "int8-serialized update tensors. Default: "
+                         "'sim' when --link-profile is given, else no "
+                         "transport (analytic accounting)")
     ap.add_argument("--link-profile", default=None,
                     choices=["uniform", "wireless", "regions"],
-                    help="discrete-event link model: aggregation "
-                         "traffic is unrolled into messages, timed "
-                         "over per-peer modeled links, and the ledger "
-                         "+ per-step simulated wall-clock come from "
-                         "the transcript (runtime/network.py)")
+                    help="discrete-event link model for the sim "
+                         "transport: aggregation traffic is unrolled "
+                         "into messages, timed over per-peer modeled "
+                         "links, and the ledger + per-step simulated "
+                         "wall-clock come from the transcript "
+                         "(runtime/network.py)")
     ap.add_argument("--link-loss", type=float, default=0.0,
                     help="per-message loss probability on the modeled "
-                         "links; a peer whose send is lost mid-round "
-                         "is demoted to receiver-only for that step")
+                         "links (or injected send failures on the "
+                         "socket transport); a peer whose send is "
+                         "lost mid-round is demoted to receiver-only "
+                         "for that step")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
@@ -142,17 +160,20 @@ def main(argv=None) -> int:
         straggler=StragglerPolicy())
     metrics_log = MetricsLogger(args.metrics)
     network = None
-    if args.link_profile:
-        from repro.runtime.network import NetworkSim, demote_lost_senders
-        network = NetworkSim(
-            args.peers, profile=args.link_profile, seed=args.seed,
+    transport = args.transport or ("sim" if args.link_profile else None)
+    if transport is not None:
+        from repro.runtime.transport_base import (build_transport,
+                                                  demote_lost_senders)
+        network = build_transport(
+            transport, args.peers, profile=args.link_profile,
+            seed=args.seed,
             link_params={"loss": args.link_loss} if args.link_loss
             else None)
-    # the mask-free fast path needs genuinely lossless links too: the
-    # regions profile carries per-tier loss even without --link-loss
+    # the mask-free fast path needs a genuinely lossless transport too:
+    # the regions profile carries per-tier loss even without --link-loss
     always_full = args.churn is None and args.participation >= 1.0 \
         and args.dropout <= 0.0 \
-        and (network is None or not network.links.loss.any())
+        and (network is None or network.lossless)
 
     for t in range(start, start + args.steps):
         raw = next(stream)
@@ -175,7 +196,12 @@ def main(argv=None) -> int:
             n_act = int(a.sum())
             mplan = pipeline.message_plan(np.asarray(a),
                                           peer_model_bytes, n_act)
-            transcript = network.run(mplan)
+            payloads = None
+            if network.wants_payloads:
+                from repro.runtime.socket_transport import \
+                    encode_state_payloads
+                payloads = encode_state_payloads(state["params"])
+            transcript = network.run(mplan, payloads=payloads)
             a = demote_lost_senders(a, u, transcript)
         t0 = time.time()
         if always_full:
@@ -228,8 +254,11 @@ def main(argv=None) -> int:
         print(f"[train] checkpointed at {start + args.steps}")
     per_source = " ".join(f"{k}={v/1e6:.1f}MB"
                           for k, v in ledger.by_source.items())
-    sim = (f" simulated={ledger.total_seconds:.2f}s"
-           f" ({args.link_profile})" if network is not None else "")
+    sim = ""
+    if network is not None:
+        kind = ("wall-clock" if network.name == "socket"
+                else f"simulated ({args.link_profile or 'uniform'})")
+        sim = f" comm_s={ledger.total_seconds:.2f} [{kind}]"
     print(f"[train] comm total={ledger.total_bytes/1e6:.1f}MB "
           f"{per_source}{sim}")
     if lifecycle.event_log:

@@ -26,13 +26,20 @@ module gives the stack that time axis:
   arrival, so group barriers, ring hops, and hierarchy waits all emerge
   from message structure alone.
 
-* :class:`Transcript` — what actually happened: per-link and per-round
-  bytes, per-round completion times, per-peer finish times, dropped
-  messages, and the senders whose traffic was lost (the federation
-  demotes them to receiver-only for the iteration — paper §3.1 churn
-  semantics). The transcript, not the closed-form formulas in
-  ``core/topology.py``, feeds the ``CommLedger``; the formulas stay as
-  cross-checked oracles (``tests/test_network.py``).
+* :class:`~repro.runtime.transport_base.Transcript` — what actually
+  happened: per-link and per-round bytes, per-round completion times,
+  per-peer finish times, dropped messages, and the senders whose
+  traffic was lost (the federation demotes them to receiver-only for
+  the iteration — paper §3.1 churn semantics). The transcript, not the
+  closed-form formulas in ``core/topology.py``, feeds the
+  ``CommLedger``; the formulas stay as cross-checked oracles
+  (``tests/test_network.py``).
+
+:class:`NetworkSim` is the ``"sim"`` backend of the pluggable
+:class:`~repro.runtime.transport_base.Transport` interface — the same
+MessagePlans run unchanged over real loopback TCP
+(``runtime/socket_transport.py``), and the two transcripts are
+byte-identical in the no-loss case (DESIGN.md §10).
 
 Node ids ``>= n_peers`` (the FedAvg server, the hierarchical
 rendezvous) are infrastructure: unbounded bandwidth, zero latency,
@@ -40,13 +47,20 @@ lossless — client links stay the bottleneck.
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
 from typing import Any, Dict, List, Optional, Tuple, Type
 
 import numpy as np
 
 from repro.core.transport import Message, MessagePlan
+from repro.runtime.transport_base import (Transcript, Transport,
+                                          demote_lost_senders,
+                                          register_transport)
+
+__all__ = ["LINK_MODELS", "LinkModel", "MBPS", "NetworkSim", "Transcript",
+           "UniformLinks", "LognormalWirelessLinks", "RegionLinks",
+           "build_link_model", "demote_lost_senders",
+           "register_link_model"]
 
 MBPS = 125_000.0          # 1 Mbit/s in bytes/s
 
@@ -209,38 +223,13 @@ class RegionLinks(LinkModel):
 
 
 # ---------------------------------------------------------------------------
-# the transcript
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class Transcript:
-    """What one simulated FL iteration actually did on the wire."""
-
-    technique: str
-    n_messages: int = 0
-    total_bytes: float = 0.0
-    bytes_by_round: List[float] = dataclasses.field(default_factory=list)
-    round_s: List[float] = dataclasses.field(default_factory=list)
-    iteration_s: float = 0.0
-    peer_finish_s: np.ndarray = dataclasses.field(
-        default_factory=lambda: np.zeros(0))
-    bytes_by_link: Dict[Tuple[int, int], float] = dataclasses.field(
-        default_factory=dict)
-    dropped: List[Message] = dataclasses.field(default_factory=list)
-    lost_senders: np.ndarray = dataclasses.field(
-        default_factory=lambda: np.zeros(0, bool))
-
-    @property
-    def n_dropped(self) -> int:
-        return len(self.dropped)
-
-
-# ---------------------------------------------------------------------------
 # the simulator
 # ---------------------------------------------------------------------------
 
-class NetworkSim:
-    """Event-driven message timing over a :class:`LinkModel`.
+@register_transport
+class NetworkSim(Transport):
+    """Event-driven message timing over a :class:`LinkModel` — the
+    ``"sim"`` transport backend.
 
     One :meth:`run` call simulates one FL iteration's
     :class:`MessagePlan` and returns its :class:`Transcript`;
@@ -263,6 +252,8 @@ class NetworkSim:
     (``id >= n_peers``) take zero time; infrastructure is lossless.
     """
 
+    name = "sim"
+
     def __init__(self, n_peers: int, profile: str = "uniform",
                  seed: int = 0,
                  link_params: Optional[Dict[str, Any]] = None,
@@ -273,9 +264,19 @@ class NetworkSim:
         self.clock = 0.0           # cumulative simulated seconds
         self.iterations = 0
 
+    @classmethod
+    def from_config(cls, n_peers, *, profile=None, seed=0,
+                    link_params=None, **kwargs):
+        return cls(n_peers, profile=profile or "uniform", seed=seed,
+                   link_params=link_params, **kwargs)
+
     @property
     def n_peers(self) -> int:
         return self.links.n_peers
+
+    @property
+    def lossless(self) -> bool:
+        return not self.links.loss.any()
 
     def resize(self, new_n: int) -> None:
         """Elastic membership: survivors keep their links, joiners draw
@@ -284,10 +285,13 @@ class NetworkSim:
 
     # ------------------------------------------------------------------
     def run(self, plan: MessagePlan,
-            compute_s: Optional[np.ndarray] = None) -> Transcript:
+            compute_s: Optional[np.ndarray] = None,
+            payloads: Optional[Any] = None) -> Transcript:
         """Simulate one iteration; ``compute_s`` (per real peer) seeds
         each peer's ready time with its local-update duration so slow
-        *compute* and slow *links* compose into one finish time."""
+        *compute* and slow *links* compose into one finish time.
+        ``payloads`` is accepted for Transport-interface compatibility
+        and ignored — no real byte crosses the simulator."""
         links = self.links
         n_real = links.n_peers
         n_nodes = max(plan.n_nodes, n_real)
@@ -356,25 +360,7 @@ class NetworkSim:
 
         tr.peer_finish_s = ready[:n_real].copy()
         tr.iteration_s = float(ready.max()) if n_nodes else 0.0
+        self._split_kd_bytes(tr, plan)
         self.clock += tr.iteration_s
         self.iterations += 1
         return tr
-
-
-def demote_lost_senders(a: np.ndarray, u: np.ndarray,
-                        transcript: Transcript) -> np.ndarray:
-    """Fold a transcript's lost senders out of the aggregation mask.
-
-    A peer whose send was dropped mid-round becomes receiver-only for
-    this aggregation (paper §3.1 — it still receives the group mean);
-    if every aggregator was lost, the first participating peer is kept
-    so Alg. 1 always has >= 1 contributor. Returns a new mask; both
-    the sim federation and the device trainer share this rule.
-    """
-    if not transcript.n_dropped:
-        return a
-    a = np.asarray(a) * (1.0 - transcript.lost_senders
-                         .astype(np.float32))
-    if not (a > 0).any():
-        a[np.flatnonzero(np.asarray(u) > 0)[0]] = 1.0
-    return a

@@ -1,0 +1,348 @@
+"""Real loopback TCP transport: the ``"socket"`` MessagePlan backend.
+
+Where :class:`~repro.runtime.network.NetworkSim` *models* a
+:class:`~repro.core.transport.MessagePlan`, this backend *executes* it:
+every node of the plan (real peers and infrastructure ids alike) runs
+as an asyncio task with its own TCP server on 127.0.0.1, and every
+non-loopback message becomes an actual framed ``send``/``recv`` between
+two of those tasks. The per-round dependency semantics are the plan's
+own — a node sends its round-``r`` messages once it has received all
+its round-``r-1`` frames; there is no global barrier — so group
+waits, ring hops, and hierarchy structure shape real wall-clock the
+same way they shape simulated time.
+
+Transcript contract (the sim-vs-real calibration story, DESIGN.md §10):
+
+* **Bytes are measured off received frame headers.** Each frame bills
+  the plan's scheduled ``nbytes`` (carried as a float64 so fractional
+  butterfly chunks round-trip exactly) and additionally moves a payload
+  of ``ceil(nbytes)`` real octets, counted into ``payload_bytes``. A
+  no-loss socket transcript is therefore *byte-identical* to the
+  simulator's — same ``total_bytes``, ``bytes_by_round``,
+  ``bytes_by_link`` — which
+  ``benchmarks/transport_calibration.py`` asserts exactly.
+* **Seconds are wall-clock**, not modeled: ``round_s`` stamps when the
+  last frame of each round landed, ``peer_finish_s`` when each peer
+  task completed its schedule. Reported, never asserted — loopback
+  timing is the calibration *input*, not a claim.
+* **Loss is injected, not suffered**: per-message Bernoulli at
+  ``loss`` (seeded like the simulator's draw) and/or an explicit
+  ``fail_sends={(round, src, dst), ...}`` set. A "lost" frame is still
+  transmitted — flagged in its header so the receiver bills its
+  airtime, counts it for round progression, but records it dropped and
+  flags the sender — keeping ``demote_lost_senders`` semantics
+  identical across backends without deadlocking the schedule.
+
+Payloads are real update tensors: :func:`encode_state_payloads`
+serializes each peer's stacked state leaves through the int8 absmax
+wire format of ``core/compression.py`` (int8 codes + f32 scales), and
+each frame's payload window cycles through the sender's blob. Peers
+whose blob is shorter than their scheduled bytes pad with zeros;
+infrastructure nodes (which own no model) always send zeros.
+"""
+from __future__ import annotations
+
+import asyncio
+import math
+import struct
+import time
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.transport import Message, MessagePlan
+from repro.runtime.transport_base import (Transcript, Transport,
+                                          register_transport)
+
+#: frame header: round, src, dst, billed nbytes (f64), lost flag,
+#: payload length in real octets
+_HEADER = struct.Struct("!IIIdBI")
+_READ_CHUNK = 1 << 20
+
+
+class _Collector:
+    """Shared accounting for one run: receivers record every frame here
+    (single event loop — no locking needed), peer tasks await their
+    per-round arrival counts, and the transcript falls out at the end."""
+
+    def __init__(self, plan: MessagePlan, n_nodes: int, n_real: int):
+        self.t0 = time.perf_counter()
+        self.n_real = n_real
+        n_rounds = len(plan.rounds)
+        self.tr = Transcript(technique=plan.technique,
+                             lost_senders=np.zeros(n_real, bool))
+        self.tr.bytes_by_round = [0.0] * n_rounds
+        self.tr.peer_finish_s = np.zeros(n_real)
+        # all billed events per round (loopbacks included) -> round_s
+        self.round_total = [len(msgs) for msgs in plan.rounds]
+        self.round_seen = [0] * n_rounds
+        self.round_done_t = [0.0] * n_rounds
+        # socket frames each node must receive per round (loopbacks are
+        # billed at the sender and never hit the wire)
+        self.expected = [[0] * n_nodes for _ in range(n_rounds)]
+        for r, msgs in enumerate(plan.rounds):
+            for m in msgs:
+                if m.src != m.dst:
+                    self.expected[r][m.dst] += 1
+        self.seen = [[0] * n_nodes for _ in range(n_rounds)]
+        self.events = [[asyncio.Event() for _ in range(n_nodes)]
+                       for _ in range(n_rounds)]
+        for r in range(n_rounds):
+            for node in range(n_nodes):
+                if not self.expected[r][node]:
+                    self.events[r][node].set()
+
+    def bill(self, rnd: int, src: int, dst: int, nbytes: float,
+             lost: bool, payload_len: int = 0) -> None:
+        """Account one frame (or loopback) exactly like the simulator's
+        per-message billing: scheduled bytes, link/round split, drops."""
+        tr = self.tr
+        tr.n_messages += 1
+        tr.total_bytes += nbytes
+        tr.payload_bytes += payload_len
+        tr.bytes_by_round[rnd] += nbytes
+        key = (src, dst)
+        tr.bytes_by_link[key] = tr.bytes_by_link.get(key, 0.0) + nbytes
+        if lost:
+            tr.dropped.append(Message(src, dst, nbytes))
+            if src < self.n_real:
+                tr.lost_senders[src] = True
+        self.round_seen[rnd] += 1
+        if self.round_seen[rnd] == self.round_total[rnd]:
+            self.round_done_t[rnd] = time.perf_counter() - self.t0
+
+    def arrived(self, rnd: int, dst: int) -> None:
+        self.seen[rnd][dst] += 1
+        if self.seen[rnd][dst] == self.expected[rnd][dst]:
+            self.events[rnd][dst].set()
+
+    async def wait_round(self, rnd: int, node: int) -> None:
+        await self.events[rnd][node].wait()
+
+
+@register_transport
+class SocketTransport(Transport):
+    """Every plan node as an asyncio task over loopback TCP.
+
+    ``run`` is synchronous at the call site (it owns a private event
+    loop per iteration), so the federation's per-step traffic path is
+    backend-agnostic: ``transport.run(plan, payloads=...)`` either
+    simulates or really transmits.
+    """
+
+    name = "socket"
+    wants_payloads = True
+
+    def __init__(self, n_peers: int, seed: int = 0, loss: float = 0.0,
+                 fail_sends: Optional[Set[Tuple[int, int, int]]] = None,
+                 host: str = "127.0.0.1", timeout_s: float = 120.0):
+        self._n_peers = n_peers
+        self.seed = seed
+        self.loss = float(loss)
+        self.fail_sends = set(fail_sends or ())
+        self.host = host
+        self.timeout_s = timeout_s
+        self.clock = 0.0           # cumulative wall-clock seconds
+        self.iterations = 0
+
+    @classmethod
+    def from_config(cls, n_peers, *, profile=None, seed=0,
+                    link_params=None, **kwargs):
+        # loopback links are real — of the link knobs only the loss
+        # rate survives, as deterministic send-failure injection
+        loss = float((link_params or {}).get("loss", 0.0))
+        return cls(n_peers, seed=seed, loss=loss, **kwargs)
+
+    @property
+    def n_peers(self) -> int:
+        return self._n_peers
+
+    @property
+    def lossless(self) -> bool:
+        return self.loss <= 0.0 and not self.fail_sends
+
+    def resize(self, new_n: int) -> None:
+        """Elastic membership: node identity is positional, so only the
+        peer count moves; the cumulative clock carries over."""
+        self._n_peers = new_n
+
+    # ------------------------------------------------------------------
+    def run(self, plan: MessagePlan,
+            compute_s: Optional[np.ndarray] = None,
+            payloads: Optional[Sequence[bytes]] = None) -> Transcript:
+        """Execute one iteration's plan over real sockets.
+
+        ``compute_s`` is ignored — this backend measures communication
+        only; compute/straggler modeling stays with the lifecycle.
+        ``payloads`` maps peer id -> serialized update blob
+        (:func:`encode_state_payloads`); omitted peers send zeros.
+        """
+        tr = asyncio.run(self._run(plan, payloads))
+        self._split_kd_bytes(tr, plan)
+        self.clock += tr.iteration_s
+        self.iterations += 1
+        return tr
+
+    # ------------------------------------------------------------------
+    def _draw_losses(self, plan: MessagePlan) -> List[List[bool]]:
+        """Per-message drop decisions, fixed before any task starts so
+        the pattern is deterministic in (seed, iterations) regardless of
+        socket scheduling. The rng is seeded like the simulator's
+        per-iteration stream, but the draws are NOT aligned with it:
+        the sim draws per non-loopback message at the combined
+        endpoint rate (infrastructure downlinks included), while this
+        backend draws only for peer-sourced messages at the flat
+        ``loss`` rate — same seed does not mean the same drop pattern
+        across backends."""
+        rng = np.random.default_rng(
+            (self.seed + 1) * 48611 + self.iterations)
+        out: List[List[bool]] = []
+        for r, msgs in enumerate(plan.rounds):
+            row = []
+            for m in msgs:
+                lost = False
+                if m.src != m.dst and m.src < self._n_peers:
+                    if self.loss > 0.0:
+                        lost = bool(rng.random() < self.loss)
+                    lost = lost or (r, m.src, m.dst) in self.fail_sends
+                row.append(lost)
+            out.append(row)
+        return out
+
+    def _payload_for(self, src: int, nbytes: float,
+                     payloads: Optional[Sequence[bytes]]) -> bytes:
+        size = int(math.ceil(nbytes))
+        if size <= 0:
+            return b""
+        blob: bytes = b""
+        if payloads is not None and src < self._n_peers:
+            if isinstance(payloads, dict):
+                blob = payloads.get(src, b"")
+            elif src < len(payloads):
+                blob = payloads[src]
+        if not blob:
+            return bytes(size)
+        if len(blob) >= size:
+            return blob[:size]
+        reps = -(-size // len(blob))
+        return (blob * reps)[:size]
+
+    async def _run(self, plan: MessagePlan,
+                   payloads: Optional[Sequence[bytes]]) -> Transcript:
+        n_real = self._n_peers
+        n_nodes = max(plan.n_nodes, n_real)
+        col = _Collector(plan, n_nodes, n_real)
+        losses = self._draw_losses(plan)
+
+        async def handler(reader: asyncio.StreamReader,
+                          writer: asyncio.StreamWriter) -> None:
+            try:
+                while True:
+                    hdr = await reader.readexactly(_HEADER.size)
+                    rnd, src, dst, nbytes, lost, plen = _HEADER.unpack(hdr)
+                    got = 0
+                    while got < plen:           # really pull the octets
+                        chunk = await reader.read(
+                            min(plen - got, _READ_CHUNK))
+                        if not chunk:
+                            raise asyncio.IncompleteReadError(b"", plen)
+                        got += len(chunk)
+                    col.bill(rnd, src, dst, nbytes, bool(lost), plen)
+                    col.arrived(rnd, dst)
+            except (asyncio.IncompleteReadError, ConnectionResetError):
+                pass                            # sender closed its link
+            finally:
+                writer.close()
+
+        servers = []
+        ports: List[int] = []
+        for _ in range(n_nodes):
+            srv = await asyncio.start_server(handler, self.host, 0)
+            servers.append(srv)
+            ports.append(srv.sockets[0].getsockname()[1])
+
+        async def node_task(me: int) -> None:
+            writers: Dict[int, asyncio.StreamWriter] = {}
+            try:
+                for r, msgs in enumerate(plan.rounds):
+                    for seq, m in enumerate(msgs):
+                        if m.src != me:
+                            continue
+                        if m.src == m.dst:      # loopback: billed, local
+                            col.bill(r, m.src, m.dst, m.nbytes, False)
+                            continue
+                        w = writers.get(m.dst)
+                        if w is None:
+                            _, w = await asyncio.open_connection(
+                                self.host, ports[m.dst])
+                            writers[m.dst] = w
+                        payload = self._payload_for(me, m.nbytes,
+                                                    payloads)
+                        w.write(_HEADER.pack(r, m.src, m.dst,
+                                             float(m.nbytes),
+                                             int(losses[r][seq]),
+                                             len(payload)))
+                        w.write(payload)
+                        await w.drain()
+                    await col.wait_round(r, me)
+                if me < n_real:
+                    col.tr.peer_finish_s[me] = \
+                        time.perf_counter() - col.t0
+            finally:
+                for w in writers.values():
+                    w.close()
+
+        try:
+            await asyncio.wait_for(
+                asyncio.gather(*(node_task(i) for i in range(n_nodes))),
+                timeout=self.timeout_s)
+        except asyncio.TimeoutError:
+            raise RuntimeError(
+                f"socket transport stalled past {self.timeout_s}s "
+                f"executing a {plan.technique!r} plan "
+                f"({plan.n_messages} messages over {n_nodes} nodes)")
+        finally:
+            for srv in servers:
+                srv.close()
+            await asyncio.gather(*(s.wait_closed() for s in servers))
+
+        tr = col.tr
+        # round completion is monotone like the simulator's cumulative
+        # ready times (late rounds can't finish before earlier ones)
+        t = 0.0
+        for rt in col.round_done_t:
+            t = max(t, rt)
+            tr.round_s.append(t)
+        tr.iteration_s = time.perf_counter() - col.t0
+        return tr
+
+
+# ---------------------------------------------------------------------------
+# real-tensor payload serialization (int8 wire format)
+# ---------------------------------------------------------------------------
+
+def encode_state_payloads(state: Any) -> List[bytes]:
+    """Serialize peer-stacked update tensors into per-peer wire blobs.
+
+    Every leaf of ``state`` must carry peers on its leading axis. Each
+    leaf is pushed through the int8 absmax quantizer of
+    ``core/compression.py`` (the same wire format the Int8EF stage
+    accounts for) and each peer's blob concatenates its int8 codes plus
+    the f32 scales — the bytes a frame's payload window cycles through.
+    """
+    import jax
+
+    from repro.core.compression import quantize_int8
+
+    leaves = jax.tree.leaves(state)
+    if not leaves:
+        return []
+    n = int(leaves[0].shape[0])
+    blobs = [bytearray() for _ in range(n)]
+    for leaf in leaves:
+        q, scale = quantize_int8(leaf)
+        qn = np.asarray(q)
+        sn = np.asarray(scale, dtype=np.float32)
+        for i in range(n):
+            blobs[i] += qn[i].tobytes() + sn[i].tobytes()
+    return [bytes(b) for b in blobs]

@@ -1,0 +1,191 @@
+"""The pluggable transport seam: one MessagePlan executor interface.
+
+A :class:`~repro.core.transport.MessagePlan` says *what* one FL
+iteration's traffic is — per-round ``(src, dst, nbytes)`` messages. A
+:class:`Transport` says *how* those messages move: the discrete-event
+simulator (``runtime/network.py``, backend ``"sim"``) times them over
+modeled links; the real loopback transport
+(``runtime/socket_transport.py``, backend ``"socket"``) runs every peer
+as an asyncio task and pushes the bytes through actual TCP sockets.
+Both return the same :class:`Transcript` shape — per-link and per-round
+bytes, round completion times, per-peer finish times, dropped
+messages — so the ``CommLedger`` (via
+``AggregationPipeline.record_transcript``), the churn demotion rule
+(:func:`demote_lost_senders`) and the benchmarks consume either backend
+unchanged. That shared contract is what makes sim-vs-real calibration
+possible (``benchmarks/transport_calibration.py``): the *bytes* of a
+no-loss transcript are byte-identical across backends (both bill the
+plan's scheduled sizes, the socket backend measuring them off received
+frame headers), while the *seconds* axis is modeled on one and
+wall-clock-measured on the other.
+
+Backend selection threads through ``FederationConfig(transport=...)``
+and ``launch/train.py --transport``; new backends register with
+:func:`register_transport` and are built by name via
+:func:`build_transport`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple, Type
+
+import numpy as np
+
+from repro.core.transport import Message, MessagePlan
+
+
+# ---------------------------------------------------------------------------
+# the transcript — the one shape every backend emits
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Transcript:
+    """What one FL iteration actually did on the wire.
+
+    Byte fields bill the plan's *scheduled* sizes (lost messages
+    consumed airtime and are billed), so a no-loss transcript is
+    byte-identical across transport backends. ``kd_bytes`` is the
+    portion carried by the plan's MKD prefix rounds
+    (``MessagePlan.kd_rounds``) — distillation traffic rides the same
+    transport as aggregation traffic and is split back out for the
+    ledger's per-source accounting. ``payload_bytes`` counts the actual
+    octets a real transport moved through its frames (0 for the
+    simulator).
+    """
+
+    technique: str
+    n_messages: int = 0
+    total_bytes: float = 0.0
+    bytes_by_round: List[float] = dataclasses.field(default_factory=list)
+    round_s: List[float] = dataclasses.field(default_factory=list)
+    iteration_s: float = 0.0
+    peer_finish_s: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+    bytes_by_link: Dict[Tuple[int, int], float] = dataclasses.field(
+        default_factory=dict)
+    dropped: List[Message] = dataclasses.field(default_factory=list)
+    lost_senders: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, bool))
+    kd_bytes: float = 0.0
+    payload_bytes: float = 0.0
+
+    @property
+    def n_dropped(self) -> int:
+        return len(self.dropped)
+
+
+def demote_lost_senders(a: np.ndarray, u: np.ndarray,
+                        transcript: Transcript) -> np.ndarray:
+    """Fold a transcript's lost senders out of the aggregation mask.
+
+    A peer whose send was dropped mid-round becomes receiver-only for
+    this aggregation (paper §3.1 — it still receives the group mean);
+    if every aggregator was lost, the first participating peer is kept
+    so Alg. 1 always has >= 1 contributor. Returns a new mask; the sim
+    federation, the device trainer, and both transport backends share
+    this rule.
+    """
+    if not transcript.n_dropped:
+        return a
+    a = np.asarray(a) * (1.0 - transcript.lost_senders
+                         .astype(np.float32))
+    if not (a > 0).any():
+        a[np.flatnonzero(np.asarray(u) > 0)[0]] = 1.0
+    return a
+
+
+# ---------------------------------------------------------------------------
+# the transport interface + registry
+# ---------------------------------------------------------------------------
+
+TRANSPORTS: Dict[str, Type["Transport"]] = {}
+
+
+def register_transport(cls: Type["Transport"]) -> Type["Transport"]:
+    TRANSPORTS[cls.name] = cls
+    return cls
+
+
+class Transport:
+    """A MessagePlan executor.
+
+    One :meth:`run` call executes one FL iteration's plan and returns
+    its :class:`Transcript`; ``clock`` accumulates seconds across
+    iterations (simulated for the sim backend, wall-clock for real
+    ones) and ``iterations`` counts runs — both feed the training
+    history and benchmarks regardless of backend.
+    """
+
+    name: str = "?"
+    #: a real transport serializes actual update tensors into its
+    #: frames; the federation only encodes payloads when this is set
+    wants_payloads: bool = False
+
+    clock: float = 0.0
+    iterations: int = 0
+
+    @property
+    def n_peers(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def lossless(self) -> bool:
+        """True when no message of any run can be dropped — the
+        fast-path predicate callers use to skip mask plumbing."""
+        raise NotImplementedError
+
+    def run(self, plan: MessagePlan,
+            compute_s: Optional[np.ndarray] = None,
+            payloads: Optional[Any] = None) -> Transcript:
+        """Execute one iteration's plan; ``compute_s`` (per real peer)
+        seeds peer readiness where the backend models it, ``payloads``
+        carries per-peer serialized update bytes for backends that move
+        real data (``wants_payloads``)."""
+        raise NotImplementedError
+
+    def resize(self, new_n: int) -> None:
+        """Elastic membership: survivors keep their identity (and, for
+        modeled backends, their links); the cumulative clock carries
+        over."""
+        raise NotImplementedError
+
+    @classmethod
+    def from_config(cls, n_peers: int, *, profile: Optional[str] = None,
+                    seed: int = 0,
+                    link_params: Optional[Dict[str, Any]] = None,
+                    **kwargs: Any) -> "Transport":
+        """Uniform constructor surface for :func:`build_transport`:
+        every backend interprets the federation's link knobs its own
+        way (the simulator builds a LinkModel; the socket backend has
+        real loopback links and keeps only the loss rate for
+        injection)."""
+        raise NotImplementedError
+
+    @staticmethod
+    def _split_kd_bytes(tr: Transcript, plan: MessagePlan) -> None:
+        """Fill ``kd_bytes`` from the plan's MKD prefix rounds — shared
+        epilogue so both backends split distillation traffic the same
+        way."""
+        kd = getattr(plan, "kd_rounds", 0)
+        if kd:
+            tr.kd_bytes = float(sum(tr.bytes_by_round[:kd]))
+
+
+def build_transport(name: str, n_peers: int, *,
+                    profile: Optional[str] = None, seed: int = 0,
+                    link_params: Optional[Dict[str, Any]] = None,
+                    **kwargs: Any) -> Transport:
+    """Build a registered transport backend by name.
+
+    ``"sim"`` — the discrete-event simulator over modeled links;
+    ``"socket"`` — real asyncio tasks over loopback TCP.
+    """
+    # importing the implementations registers them; lazy to avoid the
+    # transport_base <-> network import cycle
+    from repro.runtime import network, socket_transport  # noqa: F401
+    if name not in TRANSPORTS:
+        raise ValueError(f"unknown transport {name!r}; "
+                         f"registered: {sorted(TRANSPORTS)}")
+    return TRANSPORTS[name].from_config(
+        n_peers, profile=profile, seed=seed, link_params=link_params,
+        **kwargs)

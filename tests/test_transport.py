@@ -1,0 +1,246 @@
+"""The pluggable transport seam (ISSUE 4): sim-vs-socket parity, loss
+injection, MKD traffic through the transport, and the tightened
+hierarchical oracle.
+
+The contract under test: a :class:`SocketTransport` run of any
+MessagePlan emits a transcript *byte-identical* to the simulator's in
+the no-loss case — same totals, per-round split, per-link split — and
+its loss semantics (billed airtime, flagged senders, receiver-only
+demotion) match :func:`demote_lost_senders` exactly, so every consumer
+of the transcript (ledger, churn demotion, benchmarks) is
+backend-agnostic.
+"""
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.aggregation import (CommLedger, TECHNIQUES,
+                                    build_pipeline, make_aggregator)
+from repro.core.federation import Federation, FederationConfig
+from repro.core.moshpit import plan_grid
+from repro.runtime.network import NetworkSim
+from repro.runtime.socket_transport import (SocketTransport,
+                                            encode_state_payloads)
+from repro.runtime.transport_base import (TRANSPORTS, Transport,
+                                          build_transport,
+                                          demote_lost_senders)
+
+MB = 10_000   # state bytes per transfer (integral -> float sums exact)
+
+
+def _both(mplan, n, seed=0, **socket_kw):
+    sim = NetworkSim(n, profile="uniform", seed=seed).run(mplan)
+    sock = SocketTransport(n, seed=seed, **socket_kw).run(mplan)
+    return sim, sock
+
+
+# ---------------------------------------------------------------------------
+# registry + interface
+# ---------------------------------------------------------------------------
+
+def test_transport_registry():
+    assert {"sim", "socket"} <= set(TRANSPORTS)
+    assert all(issubclass(c, Transport) for c in TRANSPORTS.values())
+    with pytest.raises(ValueError, match="unknown transport"):
+        build_transport("carrier-pigeon", 4)
+
+
+def test_build_transport_maps_link_knobs():
+    sim = build_transport("sim", 8, profile="wireless", seed=3)
+    assert sim.name == "sim" and sim.links.name == "wireless"
+    sock = build_transport("socket", 8, profile="wireless", seed=3,
+                           link_params={"loss": 0.25})
+    # the socket backend has real loopback links: only loss survives
+    assert sock.name == "socket" and sock.loss == 0.25
+    assert not sock.lossless
+    assert sim.lossless       # wireless profile defaults to loss 0
+
+
+# ---------------------------------------------------------------------------
+# the acceptance property: sim-vs-socket transcript byte equality
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [4, 8])
+@pytest.mark.parametrize("tech", ["mar", "fedavg", "ar", "gossip"])
+def test_sim_vs_socket_byte_exact(tech, n):
+    plan = plan_grid(n)
+    agg = make_aggregator(tech, plan)
+    mplan = agg.message_plan(np.ones(n, np.float32), MB)
+    sim, sock = _both(mplan, n)
+    assert sock.total_bytes == sim.total_bytes
+    assert sock.n_messages == sim.n_messages
+    assert sock.bytes_by_round == sim.bytes_by_round
+    assert sock.bytes_by_link == sim.bytes_by_link
+    assert sock.n_dropped == 0
+    # same transcript *shape*: the time axis exists on both, only its
+    # meaning differs (modeled vs measured wall-clock)
+    assert len(sock.round_s) == len(sim.round_s)
+    assert sock.peer_finish_s.shape == sim.peer_finish_s.shape
+    assert sock.iteration_s > 0.0
+    # the socket really moved the scheduled octets
+    assert sock.payload_bytes == sum(
+        int(np.ceil(m.nbytes)) for r in mplan.rounds for m in r
+        if m.src != m.dst)
+
+
+@pytest.mark.parametrize("tech", ["mar", "hierarchical", "rdfl"])
+def test_sim_vs_socket_byte_exact_under_churn(tech):
+    plan = plan_grid(8)
+    agg = make_aggregator(tech, plan)
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        mask = (rng.random(8) < 0.6).astype(np.float32)
+        mplan = agg.message_plan(mask, MB)
+        sim, sock = _both(mplan, 8)
+        assert sock.total_bytes == sim.total_bytes
+        assert sock.bytes_by_link == sim.bytes_by_link
+
+
+def test_socket_payloads_carry_real_tensors():
+    state = {"w": np.arange(4 * 32, dtype=np.float32).reshape(4, 32),
+             "b": np.ones((4, 3), np.float32)}
+    blobs = encode_state_payloads(state)
+    assert len(blobs) == 4
+    # int8 codes + one f32 scale per leaf per peer
+    assert all(len(b) == 32 + 4 + 3 + 4 for b in blobs)
+    mplan = make_aggregator("mar", plan_grid(4)).message_plan(
+        np.ones(4, np.float32), MB)
+    tr = SocketTransport(4, seed=0).run(mplan, payloads=blobs)
+    assert tr.total_bytes == mplan.total_bytes
+    assert tr.payload_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# loss semantics: injected send failure == modeled drop
+# ---------------------------------------------------------------------------
+
+def test_socket_injected_failure_demotes_receiver_only():
+    plan = plan_grid(8)
+    mplan = make_aggregator("mar", plan).message_plan(
+        np.ones(8, np.float32), MB)
+    victim = mplan.rounds[0][0]
+    st = SocketTransport(8, seed=0,
+                         fail_sends={(0, victim.src, victim.dst)})
+    assert not st.lossless
+    tr = st.run(mplan)
+    assert [(m.src, m.dst) for m in tr.dropped] == \
+        [(victim.src, victim.dst)]
+    # lost frames consumed airtime: billed exactly like the simulator
+    assert tr.total_bytes == mplan.total_bytes
+    u = np.ones(8, np.float32)
+    a = demote_lost_senders(u.copy(), u, tr)
+    assert a[victim.src] == 0.0 and a.sum() == 7
+
+
+def test_socket_bernoulli_loss_flags_senders_deterministically():
+    mplan = make_aggregator("mar", plan_grid(8)).message_plan(
+        np.ones(8, np.float32), MB)
+    tr1 = SocketTransport(8, seed=2, loss=0.5).run(mplan)
+    tr2 = SocketTransport(8, seed=2, loss=0.5).run(mplan)
+    assert tr1.n_dropped > 0
+    assert tr1.total_bytes == mplan.total_bytes
+    assert ({m.src for m in tr1.dropped}
+            == set(np.flatnonzero(tr1.lost_senders)))
+    # the drop pattern is deterministic in (seed, iteration)
+    assert ([(m.src, m.dst) for m in tr1.dropped]
+            == [(m.src, m.dst) for m in tr2.dropped])
+
+
+def test_federation_trains_over_socket_transport():
+    cfg = FederationConfig(n_peers=4, technique="mar", task="text",
+                           transport="socket", seed=3)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    for _ in range(2):
+        state = fed.step(state)
+    analytic = 2 * topology.iteration_bytes("mar", 4, fed.model_bytes,
+                                            fed.plan)
+    assert fed.comm_bytes == pytest.approx(analytic)
+    assert fed.sim_seconds > 0.0          # wall-clock on this backend
+    assert fed.last_transcript.payload_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# MKD traffic rides the transport (satellite)
+# ---------------------------------------------------------------------------
+
+def test_mkd_rounds_ride_the_transport():
+    plan = plan_grid(8)
+    pipe = build_pipeline("mar", plan)
+    mask = np.ones(8, np.float32)
+    mplan = pipe.message_plan(mask, MB, 8, use_kd=True,
+                              kd_logit_bytes=256)
+    assert mplan.kd_rounds == plan.depth
+    sim, sock = _both(mplan, 8)
+    full = topology.iteration_bytes("mar", 8, MB, plan, use_kd=True,
+                                    kd_logit_bytes=256)
+    base = topology.iteration_bytes("mar", 8, MB, plan)
+    assert sim.total_bytes == pytest.approx(full)
+    assert sim.kd_bytes == pytest.approx(full - base)
+    assert sock.total_bytes == sim.total_bytes
+    assert sock.kd_bytes == sim.kd_bytes
+    # the ledger splits measured KD back out per source
+    ledger = CommLedger()
+    pipe.record_transcript(ledger, sim, 8, MB)
+    assert ledger.by_source["kd"] == pytest.approx(full - base)
+    assert ledger.by_source["agg/mar"] == pytest.approx(base)
+
+
+def test_mkd_traffic_mask_aware_under_churn():
+    """Under churn the measured KD bytes follow the mask-aware oracle:
+    pulls are active-pair exact, logits bill one message per active
+    student per round."""
+    plan = plan_grid(8)
+    pipe = build_pipeline("mar", plan)
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        mask = (rng.random(8) < 0.6).astype(np.float32)
+        n_act = int(mask.sum())
+        mplan = pipe.message_plan(mask, MB, n_act, use_kd=True,
+                                  kd_logit_bytes=256)
+        tr = NetworkSim(8, profile="uniform", seed=0).run(mplan)
+        pulls = topology.mar_bytes(n_act, plan, MB // 2, mask=mask)
+        logits = n_act * plan.depth * 256
+        assert tr.kd_bytes == pytest.approx(pulls + logits)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical oracle under churn (satellite)
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_mask_aware_parity_under_churn():
+    for n in (10, 16, 27):
+        plan = plan_grid(n)
+        agg = make_aggregator("hierarchical", plan)
+        for seed in range(5):
+            rng = np.random.default_rng(seed)
+            mask = (rng.random(n) < 0.5).astype(np.float32)
+            tr = NetworkSim(n, profile="uniform", seed=0).run(
+                agg.message_plan(mask, MB))
+            exact = topology.iteration_bytes(
+                "hierarchical", int(mask.sum()), MB, plan, mask=mask)
+            assert tr.total_bytes == pytest.approx(exact)
+
+
+def test_hierarchical_countonly_is_lower_bound():
+    """Without the mask, ceil(n/M) is the *minimum* possible nonempty
+    leaf-group count — the count-only oracle lower-bounds the measured
+    bytes and coincides at full participation."""
+    plan = plan_grid(27)
+    agg = make_aggregator("hierarchical", plan)
+    saw_gap = False
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        mask = (rng.random(27) < 0.4).astype(np.float32)
+        n_act = int(mask.sum())
+        tr = NetworkSim(27, profile="uniform", seed=0).run(
+            agg.message_plan(mask, MB))
+        lower = topology.iteration_bytes("hierarchical", n_act, MB, plan)
+        assert lower <= tr.total_bytes + 1e-9
+        saw_gap |= lower < tr.total_bytes
+    assert saw_gap          # spread-out actives really cost more
+    full = np.ones(27, np.float32)
+    tr = NetworkSim(27, profile="uniform", seed=0).run(
+        agg.message_plan(full, MB))
+    assert tr.total_bytes == pytest.approx(
+        topology.iteration_bytes("hierarchical", 27, MB, plan))
