@@ -1,0 +1,160 @@
+"""Adaptive-M vs fixed-M: the group-size controller in the timing loop.
+
+The ROADMAP's "Adaptive M" item, measured: the ``tail_aware``
+:class:`~repro.core.adaptive.GroupSizeController` consumes each
+iteration's discrete-event transcript (``runtime/network.py``) and
+regroups the MAR grid mid-run, against the static ``plan_grid``
+factorization the ``wallclock_scaling`` baselines use — same links,
+same seed, same model bytes, N in {8, 16, 64, 125} under the
+``wireless`` and ``regions`` profiles.
+
+Expected shape: on heterogeneous links the slowest peer's uplink chain
+bounds the iteration at ``depth * (M-1)`` serialized model sends, so
+the controller walks down the candidate ladder (125: 5^3 -> 3^5 ->
+2^7, i.e. 12 -> 10 -> 7 sends on the slow chain) and the steady-state
+iteration time drops below the fixed grid's; on flat links it stays at
+the planner's choice and matches the baseline exactly.
+
+Byte accounting stays honest throughout: after *every* iteration —
+including every post-regroup one — the transcript's total bytes are
+cross-checked against the mask-aware analytic oracle
+(``topology.mar_bytes``); any mismatch fails the benchmark (transports
+bill scheduled sizes, so the parity holds even under per-tier loss).
+
+Emits CSV rows plus ``BENCH_adaptive_m.json`` and exits nonzero if the
+controller loses to fixed-M at the largest wireless cell or any byte
+cross-check fails.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import emit, std_argparser
+from repro.core import topology
+from repro.core.adaptive import GroupSizeController, build_controller
+from repro.core.aggregation import make_aggregator
+from repro.core.moshpit import plan_grid
+from repro.runtime.network import NetworkSim
+
+PROFILES = ("wireless", "regions")
+
+
+def run_cell(n: int, profile: str, seed: int, iters: int,
+             model_bytes: float,
+             controller: Optional[GroupSizeController]) -> dict:
+    """One (N, profile) cell: ``iters`` MAR iterations over one
+    NetworkSim, optionally with the controller in the loop. Links are
+    drawn from (profile, n, seed) alone, so the fixed and adaptive
+    cells of a pair time their messages over identical links."""
+    net = NetworkSim(n, profile=profile, seed=seed)
+    plan = plan_grid(n)
+    mask = np.ones(n, np.float32)
+    per_iter, regroups = [], []
+    parity_ok = True
+    for t in range(iters):
+        agg = make_aggregator("mar", plan)
+        tr = net.run(agg.message_plan(mask, model_bytes))
+        per_iter.append(tr.iteration_s)
+        # no-loss byte accounting vs the mask-aware analytic oracle —
+        # checked after every iteration, i.e. after every regroup too
+        oracle = topology.mar_bytes(n, plan, model_bytes, mask=mask)
+        if abs(tr.total_bytes - oracle) >= 1.0:
+            parity_ok = False
+        if controller is not None:
+            proposal = controller.observe(t, tr, plan)
+            if proposal is not None:
+                regroups.append({"t": t, "from": list(plan.dims),
+                                 "to": list(proposal.dims)})
+                plan = proposal
+    steady_k = max(iters // 3, 1)
+    return {
+        "n_peers": n, "profile": profile,
+        "dims_final": list(plan.dims),
+        "iters": iters,
+        "mean_s": float(np.mean(per_iter)),
+        "steady_s": float(np.mean(per_iter[-steady_k:])),
+        "total_s": float(np.sum(per_iter)),
+        "regroups": regroups,
+        "byte_parity": parity_ok,
+    }
+
+
+def main(argv=None) -> int:
+    ap = std_argparser(__doc__)
+    ap.add_argument("--model-mb", type=float, default=10.0,
+                    help="state bytes per transfer (theta + momentum)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="iterations per cell (controller needs a few "
+                         "windows to converge)")
+    ap.add_argument("--controller", default="tail_aware",
+                    help="GroupSizeController to race against fixed-M")
+    ap.add_argument("--out", default="BENCH_adaptive_m.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        peer_counts, iters = (8, 16), args.iters or 10
+    elif args.full:
+        peer_counts, iters = (8, 16, 64, 125), args.iters or 60
+    else:
+        peer_counts, iters = (8, 16, 64, 125), args.iters or 24
+    model_bytes = args.model_mb * 1e6
+
+    results, summary = [], {}
+    rc = 0
+    for profile in PROFILES:
+        for n in peer_counts:
+            fixed = run_cell(n, profile, args.seed, iters, model_bytes,
+                             controller=None)
+            ctrl = build_controller(args.controller, plan_grid(n))
+            adapt = run_cell(n, profile, args.seed, iters, model_bytes,
+                             controller=ctrl)
+            speedup = (fixed["steady_s"] / adapt["steady_s"]
+                       if adapt["steady_s"] > 0 else 1.0)
+            parity = fixed["byte_parity"] and adapt["byte_parity"]
+            row = dict(profile=profile, n_peers=n,
+                       fixed_dims=str(tuple(fixed["dims_final"])),
+                       adaptive_dims=str(tuple(adapt["dims_final"])),
+                       n_regroups=len(adapt["regroups"]),
+                       fixed_steady_s=round(fixed["steady_s"], 4),
+                       adaptive_steady_s=round(adapt["steady_s"], 4),
+                       adaptive_total_s=round(adapt["total_s"], 4),
+                       fixed_total_s=round(fixed["total_s"], 4),
+                       speedup=round(speedup, 3),
+                       byte_parity=parity)
+            emit("adaptive_m", **row)
+            results.append({"fixed": fixed, "adaptive": adapt,
+                            "speedup": speedup})
+            summary[f"{profile}_n{n}_speedup"] = round(speedup, 3)
+            if not parity:
+                print(f"# FAIL byte parity at n={n} {profile}",
+                      flush=True)
+                rc = 1
+
+    # acceptance: beat-or-match fixed-M at the largest wireless cell
+    # (1.0 within noise; the controller must never *lose* steady-state)
+    n_hi = peer_counts[-1]
+    key = f"wireless_n{n_hi}_speedup"
+    if summary.get(key, 1.0) < 0.98:
+        print(f"# FAIL adaptive loses to fixed-M at N={n_hi} wireless "
+              f"(speedup {summary[key]})", flush=True)
+        rc = 1
+    emit("adaptive_m_summary", controller=args.controller,
+         iters=iters, **summary)
+
+    with open(args.out, "w") as f:
+        json.dump({"benchmark": "adaptive_m",
+                   "controller": args.controller,
+                   "model_bytes": model_bytes,
+                   "iters": iters, "seed": args.seed,
+                   "summary": summary,
+                   "results": results}, f, indent=2)
+    print(f"# wrote {args.out}", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

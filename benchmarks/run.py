@@ -24,6 +24,7 @@ MODULES = [
     "fig11_approx_agg",
     "wire_ladder",
     "wallclock_scaling",
+    "adaptive_m",
     "transport_calibration",
     "kernel_bench",
 ]

@@ -368,6 +368,11 @@ class WireStage:
         empty for new peers override)."""
         return resize_peer_axis(own, old_n, new_n, fill="mean")
 
+    def with_plan(self, new_plan: GridPlan) -> "WireStage":
+        """Same stage bound to a new grid (adaptive-M regroup). Most
+        stages are grid-agnostic; plan-holding stages override."""
+        return self
+
 
 @register_stage
 class Int8EFStage(WireStage):
@@ -463,6 +468,12 @@ class DPStage(WireStage):
                                             new_n, "zero")
         return out
 
+    def with_plan(self, new_plan):
+        # secagg pairwise masks pair within MAR groups — re-bind the grid
+        return DPStage(new_plan, noise_multiplier=self.noise_multiplier,
+                       clip_init=self.clip_init,
+                       use_secagg=self.use_secagg)
+
 
 @register_stage
 class AsyncStage(WireStage):
@@ -545,6 +556,23 @@ class AggregationPipeline:
                 out[stage.name] = stage.resize_state(out[stage.name],
                                                      old_n, new_n)
         return out
+
+    def with_plan(self, new_plan: GridPlan) -> "AggregationPipeline":
+        """Same pipeline over a new grid — the adaptive-M regroup
+        primitive (``core/adaptive.py``). The aggregator is rebuilt for
+        the new dims with its configuration preserved; stages re-bind
+        where they hold the plan (DP/secagg pairing) and pass through
+        otherwise. Peer-axis state is untouched: a same-N regroup maps
+        pipe state through :meth:`resize_state` with ``old_n ==
+        new_n``, which is the identity — survivor state stays
+        bit-exact.
+        """
+        a = self.aggregator
+        agg = type(a)(new_plan, num_rounds=a.num_rounds,
+                      backend=a.backend, one_shot=a.one_shot,
+                      comm_dtype=a.comm_dtype, use_kernel=a.use_kernel)
+        return AggregationPipeline(
+            agg, [s.with_plan(new_plan) for s in self.stages])
 
     def __call__(self, state: PyTree, pipe_state: Dict[str, PyTree],
                  mask: Array, rng: Array

@@ -89,6 +89,14 @@ class FederationConfig:
     # at each listed iteration the fleet permanently grows/shrinks and
     # the runtime regroups in place (no checkpoint/restart)
     resize_schedule: Tuple[Tuple[int, int], ...] = ()
+    # adaptive group sizing (core/adaptive.py): a GroupSizeController
+    # name ("static" | "tail_aware" | "schedule"). The controller
+    # consumes every iteration's transport transcript and may propose a
+    # new grid for the SAME peer count; Federation.regroup swaps the
+    # dims mid-run through the elastic machinery without touching
+    # membership. None disables the hook entirely.
+    adaptive_m: Optional[str] = None
+    adaptive_m_params: Optional[Dict[str, Any]] = None
     # route the sim MAR masked group mean through the fused Pallas
     # kernel (kernels/group_mean.py) instead of jnp segment sums
     pallas_group_mean: bool = False
@@ -196,6 +204,14 @@ class Federation:
         self.cfg = cfg
         self.plan = cfg.grid()
         self.pipeline = self._build_pipeline(cfg, self.plan)
+        self.controller = None
+        if cfg.adaptive_m is not None:
+            from repro.core.adaptive import build_controller
+            self.controller = build_controller(
+                cfg.adaptive_m, self.plan, **(cfg.adaptive_m_params or {}))
+        # (iteration, old_dims, new_dims) of every adaptive regroup
+        self.regroup_log: List[Tuple[int, Tuple[int, ...],
+                                     Tuple[int, ...]]] = []
         self.ledger = CommLedger()
         self.network = build_transport(cfg.transport, cfg.n_peers,
                                        profile=cfg.link_profile,
@@ -354,11 +370,44 @@ class Federation:
             self.lifecycle.resize(new_n)
         # survivors keep their modeled links; joiners draw fresh ones
         self.network.resize(new_n)
+        if self.controller is not None:
+            # new fleet, new candidate ladder — the controller re-anchors
+            self.controller.rebind(new_plan)
         # fresh jit cache: the old traces closed over the old data arrays
         self._it_fn = jax.jit(self._iteration,
                               static_argnames=("use_kd", "do_aggregate"))
         return dataclasses.replace(state, params=params,
                                    momentum=momentum, pipe=pipe)
+
+    # ------------------------------------------------------------------
+    # adaptive group sizing (same-N regroup, no membership change)
+    # ------------------------------------------------------------------
+    def regroup(self, state: FederationState,
+                new_plan: GridPlan) -> FederationState:
+        """Swap the MAR grid dims mid-run *without* touching membership
+        — the adaptive-M hook (``core/adaptive.py``).
+
+        Reuses the elastic machinery with ``old_n == new_n``: the
+        aggregation pipeline is rebuilt for the new dims
+        (:meth:`AggregationPipeline.with_plan` — the aggregator's grid
+        and any plan-holding stage re-bind, configuration preserved)
+        and the per-``WireStage`` state maps through ``resize_state``,
+        which at equal peer counts is the identity — peer state, data
+        shards, links, and lifecycle are untouched and survivor state
+        is bit-exact. Only the jit cache is refreshed (the old trace
+        closed over the old pipeline).
+        """
+        from repro.core.adaptive import validate_proposal
+        n = self.cfg.n_peers
+        validate_proposal(new_plan, n)
+        if tuple(new_plan.dims) == tuple(self.plan.dims):
+            return state
+        self.plan = new_plan
+        self.pipeline = self.pipeline.with_plan(new_plan)
+        pipe = self.pipeline.resize_state(state.pipe, n, n)
+        self._it_fn = jax.jit(self._iteration,
+                              static_argnames=("use_kd", "do_aggregate"))
+        return dataclasses.replace(state, pipe=pipe)
 
     # ------------------------------------------------------------------
     # local update (vmapped Momentum-SGD over B minibatches)
@@ -465,9 +514,22 @@ class Federation:
             self.ledger, transcript, n_active, self.model_bytes,
             use_kd=use_kd,
             kd_logit_bytes=self._kd_logit_bytes() if use_kd else 0)
-        return FederationState(params=params, momentum=momentum,
-                               iteration=state.iteration + 1, rng=rng,
-                               pipe=pipe, kd_lambda=kd_lambda)
+        out = FederationState(params=params, momentum=momentum,
+                              iteration=state.iteration + 1, rng=rng,
+                              pipe=pipe, kd_lambda=kd_lambda)
+        if self.controller is not None:
+            # the controller sees every transcript — slow wireless
+            # tails and churn-induced demotions (lost_senders) alike —
+            # and its proposal regroups before the next iteration
+            proposal = self.controller.observe(
+                state.iteration, transcript, self.plan)
+            if proposal is not None and \
+                    tuple(proposal.dims) != tuple(self.plan.dims):
+                old_dims = tuple(self.plan.dims)
+                out = self.regroup(out, proposal)
+                self.regroup_log.append(
+                    (state.iteration, old_dims, tuple(self.plan.dims)))
+        return out
 
     def _kd_logit_bytes(self) -> int:
         # per teacher<->student exchange: logits on B local minibatches
@@ -520,7 +582,8 @@ def run_federation(cfg: FederationConfig, iterations: int,
     fed = Federation(cfg, lifecycle=lifecycle)
     state = fed.init_state()
     hist = {"iteration": [], "accuracy": [], "comm_bytes": [],
-            "sim_s": [], "disagreement": [], "n_peers": [], "events": []}
+            "sim_s": [], "disagreement": [], "n_peers": [], "events": [],
+            "grid": [], "regroups": []}
     for t in range(iterations):
         state = fed.step(state)
         if (t + 1) % eval_every == 0 or t == iterations - 1:
@@ -532,9 +595,12 @@ def run_federation(cfg: FederationConfig, iterations: int,
             hist["disagreement"].append(fed.peer_disagreement(state))
             hist["n_peers"].append(fed.cfg.n_peers)
             hist["events"].append(len(fed.lifecycle.event_log))
+            hist["grid"].append(tuple(fed.plan.dims))
+            hist["regroups"].append(len(fed.regroup_log))
             if verbose:
                 print(f"  it={t+1:4d} acc={acc:.4f} "
                       f"comm={fed.comm_bytes/1e6:.1f}MB "
                       f"sim={fed.sim_seconds:.2f}s "
-                      f"peers={fed.cfg.n_peers}")
+                      f"peers={fed.cfg.n_peers} "
+                      f"grid={fed.plan.dims}")
     return hist

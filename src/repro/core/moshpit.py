@@ -111,13 +111,26 @@ def plan_grid(n_peers: int, group_size: int | None = None,
               depth: int | None = None) -> GridPlan:
     """Choose a grid for ``n_peers``.
 
-    Priority: (1) honor explicit (group_size, depth); (2) find uniform
+    Priority: (1) honor explicit (group_size, depth) — and *honor*
+    means honor: a (g, d) whose capacity ``g**d`` cannot hold N peers
+    is a ValueError, never a silently deepened grid; (2) find uniform
     M^d == N exactly (paper's optimal setup, e.g. 125 = 5^3); (3) smallest
     capacity M^d >= N with M in [3..8] (padding with virtual dropped slots
     — the appendix's approximate-aggregation regime).
     """
+    if depth is not None and depth < 1:
+        # 0 is an explicit (invalid) request, not "unset"
+        raise ValueError(f"depth must be >= 1, got {depth}")
     if group_size is not None:
-        d = depth or max(1, round(math.log(max(n_peers, 2), group_size)))
+        if depth is not None:
+            if group_size ** depth < n_peers:
+                raise ValueError(
+                    f"explicit grid (group_size={group_size}, "
+                    f"depth={depth}) has capacity "
+                    f"{group_size ** depth} < {n_peers} peers; pass a "
+                    f"deeper/wider grid or omit depth to auto-size")
+            return GridPlan(n_peers, (group_size,) * depth)
+        d = max(1, round(math.log(max(n_peers, 2), group_size)))
         while group_size ** d < n_peers:
             d += 1
         return GridPlan(n_peers, (group_size,) * d)

@@ -78,6 +78,15 @@ def main(argv=None) -> int:
                     help="per-step aggregation-dropout rate (bernoulli)")
     ap.add_argument("--churn-trace", default=None,
                     help="membership trace file for --churn trace")
+    ap.add_argument("--adaptive-m", default=None,
+                    help="adaptive group sizing (core/adaptive.py): a "
+                         "GroupSizeController name (static | "
+                         "tail_aware | schedule) consuming each step's "
+                         "transport transcript; proposals regroup the "
+                         "MAR grid in place (exact factorizations "
+                         "only — the device backend needs capacity == "
+                         "N). Requires a transport (--transport / "
+                         "--link-profile) for the transcript signal")
     ap.add_argument("--health-timeout", type=float, default=30.0,
                     help="iterations without a heartbeat before a peer "
                          "is marked dead")
@@ -175,6 +184,36 @@ def main(argv=None) -> int:
         and args.dropout <= 0.0 \
         and (network is None or network.lossless)
 
+    # launch-path validation: the device backend needs an exact grid,
+    # so permanent join/leave (trace events, schedules) cannot be
+    # honored mid-run — scan the whole planned step range NOW and fail
+    # fast with the split-and-resume recipe instead of burning compute
+    # until the tick fires (ISSUE 5 launch bugfix)
+    planned = lifecycle.planned_resizes(start, start + args.steps)
+    if planned:
+        t0, n0 = planned[0]
+        raise SystemExit(
+            f"[train] the device backend needs an exact grid; the "
+            f"churn trace/schedule requests {len(planned)} permanent "
+            f"membership change(s) within steps "
+            f"{start}..{start + args.steps - 1} (first at step {t0}: "
+            f"{args.peers} -> {n0} peers). Split the run there: train "
+            f"--steps {max(t0 - start, 0)} now, then relaunch with "
+            f"--peers {n0} --resume (sim elastic regrouping: "
+            f"Federation.resize)")
+
+    controller = None
+    if args.adaptive_m is not None:
+        from repro.core.adaptive import CONTROLLERS, build_controller
+        if args.adaptive_m not in CONTROLLERS:
+            ap.error(f"--adaptive-m must be one of "
+                     f"{sorted(CONTROLLERS)}, got {args.adaptive_m!r}")
+        if network is None:
+            ap.error("--adaptive-m needs a transcript signal: pass "
+                     "--link-profile (sim) or --transport socket")
+        controller = build_controller(args.adaptive_m, grid,
+                                      exact_only=True)
+
     for t in range(start, start + args.steps):
         raw = next(stream)
         batch = {
@@ -184,6 +223,8 @@ def main(argv=None) -> int:
         }
         tick = lifecycle.tick(t)
         if tick.resize_to is not None:
+            # backstop only: planned_resizes() validated the whole step
+            # range at launch, so scheduled/trace resizes never get here
             raise SystemExit(
                 "[train] the device backend needs an exact grid; "
                 "permanent join/leave requires relaunch + "
@@ -220,6 +261,20 @@ def main(argv=None) -> int:
             # the lifecycle's deadline policy next iteration
             lifecycle.observe_durations(
                 t, dt + transcript.peer_finish_s, mask=u)
+            if controller is not None:
+                proposal = controller.observe(t, transcript, grid)
+                if proposal is not None and \
+                        tuple(proposal.dims) != tuple(grid.dims):
+                    # same-N regroup on the device backend: exact grid
+                    # swap — pipeline re-binds, state is untouched (the
+                    # peer axis is unchanged), only the step jit
+                    # retraces
+                    print(f"[train] adaptive-M regroup at step {t+1}: "
+                          f"{grid.dims} -> {proposal.dims}")
+                    grid = proposal
+                    pipeline = pipeline.with_plan(grid)
+                    step_fn = jax.jit(make_fl_train_step(
+                        model, grid, lr=args.lr, pipeline=pipeline))
         else:
             pipeline.record_iteration(ledger, int(a.sum()),
                                       peer_model_bytes)

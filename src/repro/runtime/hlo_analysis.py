@@ -199,6 +199,8 @@ def _parse_instr(line: str) -> Optional[Instr]:
 
 
 def _operand_names(line: str, start: int) -> List[str]:
+    # depth counts (), [] and {} alike: shape strings like
+    # f32[256,256]{1,0} carry commas that must not split operands
     depth, i, toks, cur = 0, start, [], []
     while i < len(line):
         ch = line[i]
@@ -211,6 +213,12 @@ def _operand_names(line: str, start: int) -> List[str]:
             if depth == 0:
                 toks.append("".join(cur))
                 break
+            cur.append(ch)
+        elif ch in "[{":
+            depth += 1
+            cur.append(ch)
+        elif ch in "]}":
+            depth -= 1
             cur.append(ch)
         elif ch == "," and depth == 1:
             toks.append("".join(cur))

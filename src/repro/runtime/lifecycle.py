@@ -454,16 +454,20 @@ class TraceChurn(ChurnModel):
             self._by_t.setdefault(e.iteration, []).append(e)
         self.available = np.ones(n_peers, bool)
 
-    def pending_resize(self, t: int) -> Optional[int]:
+    def pending_resize(self, t: int,
+                       n_peers: Optional[int] = None) -> Optional[int]:
         """Net peer count after iteration ``t``'s join/leave events, or
-        None when membership is unchanged (lifecycle polls this first)."""
-        n = self.n_peers
+        None when membership is unchanged (lifecycle polls this first).
+        ``n_peers`` overrides the live count for pure look-ahead scans
+        (:meth:`PeerLifecycle.planned_resizes`)."""
+        n0 = self.n_peers if n_peers is None else n_peers
+        n = n0
         for e in self._by_t.get(t, ()):
             if e.kind == JOIN:
                 n += len(e.peers)
             elif e.kind == LEAVE:
                 n -= len(e.peers)
-        return n if n != self.n_peers else None
+        return n if n != n0 else None
 
     def tick(self, t: int) -> ChurnTick:
         events = list(self._by_t.get(t, ()))
@@ -634,6 +638,30 @@ class PeerLifecycle:
                 MembershipEvent(t, STRAGGLE, tuple(stragglers)))
         return LifecycleTick(u.astype(np.float32), a.astype(np.float32),
                              resize_to=resize_to, events=events)
+
+    # ------------------------------------------------------------------
+    def planned_resizes(self, start: int, stop: int
+                        ) -> List[Tuple[int, int]]:
+        """Permanent join/leave the schedule and the trace will request
+        in iterations ``[start, stop)`` — ``[(iteration, new_n), ...]``
+        in order.
+
+        Pure look-ahead (no model state is consumed): callers that
+        cannot honor mid-run resizes — the device backend in
+        ``launch/train.py`` needs an exact grid — validate the whole
+        run up front and fail fast at launch instead of discovering the
+        constraint when the tick fires mid-run.
+        """
+        out: List[Tuple[int, int]] = []
+        n = self.model.n_peers
+        for t in range(start, stop):
+            target = self.schedule.get(t)
+            if target is None and hasattr(self.model, "pending_resize"):
+                target = self.model.pending_resize(t, n_peers=n)
+            if target is not None and target != n:
+                out.append((t, int(target)))
+                n = int(target)
+        return out
 
     # ------------------------------------------------------------------
     def observe_durations(self, t: int, durations: np.ndarray,

@@ -24,6 +24,10 @@ import json
 import re
 from typing import Any, Dict, Optional
 
+# one HLO operand parser for both cost models: commas inside shape
+# strings (f32[256,256]{1,0}) must not split operand lists
+from repro.runtime.hlo_analysis import _operand_names
+
 PEAK_FLOPS = 197e12      # bf16 per chip
 HBM_BW = 819e9           # bytes/s per chip
 LINK_BW = 50e9           # bytes/s per ICI link
@@ -58,35 +62,6 @@ def _type_bytes(dtype: str, dims: str) -> int:
 
 def _type_str_bytes(type_str: str) -> int:
     return sum(_type_bytes(d, s) for d, s in _TYPE_RE.findall(type_str))
-
-
-def _operand_names(line: str, start: int) -> list:
-    """Names inside the top-level parens starting at ``start``."""
-    depth, i, names, cur = 0, start, [], []
-    while i < len(line):
-        ch = line[i]
-        if ch == "(":
-            depth += 1
-        elif ch == ")":
-            depth -= 1
-            if depth == 0:
-                names.append("".join(cur))
-                break
-        elif ch == "," and depth == 1:
-            names.append("".join(cur))
-            cur = []
-        elif depth >= 1:
-            cur.append(ch)
-        i += 1
-    out = []
-    for tok in names:
-        tok = tok.strip()
-        m = re.search(r"%([\w.\-]+)\s*$", tok)
-        if m:
-            out.append(m.group(1))
-        elif tok and not any(c in tok for c in "[]{}"):
-            out.append(tok.lstrip("%"))
-    return out
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, Any]:

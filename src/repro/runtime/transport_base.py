@@ -73,6 +73,17 @@ class Transcript:
     def n_dropped(self) -> int:
         return len(self.dropped)
 
+    def tail_stats(self) -> Tuple[float, float]:
+        """(median, max) of positive per-peer finish times — the
+        adaptive group-size controllers' signal (``core/adaptive.py``
+        reads only this contract, so one policy tunes M over modeled
+        links and over real sockets alike)."""
+        f = np.asarray(self.peer_finish_s, float)
+        f = f[f > 0]
+        if f.size == 0:
+            return 0.0, 0.0
+        return float(np.median(f)), float(f.max())
+
 
 def demote_lost_senders(a: np.ndarray, u: np.ndarray,
                         transcript: Transcript) -> np.ndarray:

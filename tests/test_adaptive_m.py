@@ -1,0 +1,276 @@
+"""Adaptive group sizing: controller registry, regroup semantics,
+federation wiring, and the ISSUE-5 planner regressions."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.adaptive import (CONTROLLERS, ScheduleController,
+                                 StaticController, TailAwareController,
+                                 build_controller, candidate_grids,
+                                 validate_proposal)
+from repro.core.federation import Federation, FederationConfig
+from repro.core.moshpit import GridPlan, plan_grid
+from repro.runtime.transport_base import Transcript
+
+
+def _transcript(finish):
+    return Transcript(technique="mar",
+                      peer_finish_s=np.asarray(finish, float))
+
+
+# ---------------------------------------------------------------------------
+# registry round-trips
+# ---------------------------------------------------------------------------
+
+def test_controller_registry_roundtrip():
+    assert {"static", "tail_aware", "schedule"} <= set(CONTROLLERS)
+    plan = plan_grid(27)
+    for name, cls in CONTROLLERS.items():
+        c = build_controller(name, plan)
+        assert isinstance(c, cls)
+        assert c.name == name
+        assert c.plan is plan
+
+
+def test_unknown_controller_rejected():
+    with pytest.raises(ValueError, match="carrier-pigeon"):
+        build_controller("carrier-pigeon", plan_grid(8))
+
+
+def test_candidate_grids_ladder():
+    dims = [p.dims for p in candidate_grids(125)]
+    assert (5, 5, 5) in dims
+    assert dims == sorted(dims, key=lambda d: d[0])  # ordered by M
+    for p in candidate_grids(125):
+        assert p.capacity >= 125
+    for p in candidate_grids(8, exact_only=True):
+        assert p.is_exact
+
+
+def test_validate_proposal_rejects_resize_and_padding():
+    with pytest.raises(ValueError, match="regroup"):
+        validate_proposal(plan_grid(12), 8)
+    with pytest.raises(ValueError, match="capacity"):
+        validate_proposal(GridPlan(8, (2, 2)), 8)
+    with pytest.raises(ValueError, match="exact"):
+        validate_proposal(plan_grid(10, group_size=4), 10,
+                          exact_only=True)
+
+
+# ---------------------------------------------------------------------------
+# controller policies (unit level, synthetic transcripts)
+# ---------------------------------------------------------------------------
+
+def test_static_never_regroups():
+    c = StaticController(plan_grid(125))
+    for t in range(10):
+        assert c.observe(t, _transcript([1.0] * 124 + [9.0]),
+                         c.plan) is None
+
+
+def test_tail_aware_shrinks_then_recovers_capped_at_home():
+    c = TailAwareController(plan_grid(125), window=2, cooldown=0)
+    home = c.plan.dims
+    plan = c.plan
+    # dominant tail: walk down the ladder
+    seen = []
+    for t in range(20):
+        p = c.observe(t, _transcript([1.0] * 124 + [8.0]), plan)
+        if p is not None:
+            assert max(p.dims) < max(plan.dims)   # shrink only
+            plan, seen = p, seen + [p.dims]
+    assert seen, "tail never triggered a shrink"
+    # flat profile: grow back toward — but never past — the home plan
+    for t in range(20, 60):
+        p = c.observe(t, _transcript([1.0] * 125), plan)
+        if p is not None:
+            plan = p
+    assert plan.dims == home
+
+
+def test_tail_aware_flat_profile_is_a_noop():
+    """On flat finish times at the planner's own grid the controller
+    proposes nothing — adaptive == static (the parity the federation
+    test pins end to end)."""
+    c = TailAwareController(plan_grid(64), window=2, cooldown=0)
+    for t in range(12):
+        assert c.observe(t, _transcript([1.0] * 64), c.plan) is None
+
+
+def test_schedule_controller_fires_once_at_iteration():
+    c = ScheduleController(plan_grid(125),
+                           schedule=((3, (5, 25)),))
+    plan = plan_grid(125)
+    assert c.observe(0, _transcript([1.0] * 125), plan) is None
+    p = c.observe(3, _transcript([1.0] * 125), plan)
+    assert p is not None and p.dims == (5, 25) and p.n_peers == 125
+    # already on the scheduled dims -> no-op
+    assert c.observe(3, _transcript([1.0] * 125), p) is None
+
+
+# ---------------------------------------------------------------------------
+# federation wiring
+# ---------------------------------------------------------------------------
+
+def _leaves_equal(a, b):
+    return all(bool((x == y).all())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_tail_aware_matches_static_on_uniform_profile():
+    """Flat-latency uniform links: the controller stays at the planner's
+    grid and the run is bit-identical to the fixed-M federation."""
+    base = FederationConfig(n_peers=8, technique="mar", task="text",
+                            link_profile="uniform", seed=3)
+    runs = {}
+    for name, cfg in (("static", base),
+                      ("tail", dataclasses.replace(
+                          base, adaptive_m="tail_aware"))):
+        fed = Federation(cfg)
+        state = fed.init_state()
+        for _ in range(5):
+            state = fed.step(state)
+        runs[name] = (fed, state)
+    fed_t, state_t = runs["tail"]
+    assert fed_t.regroup_log == []
+    assert fed_t.plan.dims == runs["static"][0].plan.dims
+    assert _leaves_equal(state_t.params, runs["static"][1].params)
+    assert _leaves_equal(state_t.momentum, runs["static"][1].momentum)
+
+
+def test_noop_regroup_is_bit_exact():
+    cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                           compress="int8_ef", seed=1)
+    fed = Federation(cfg)
+    state = fed.init_state()
+    state = fed.step(state)
+    # same dims: identity, same object
+    assert fed.regroup(state, GridPlan(8, fed.plan.dims)) is state
+    # different exact dims: peer state passes through bit-exact
+    before = jax.tree.leaves((state.params, state.momentum, state.pipe))
+    out = fed.regroup(state, GridPlan(8, (8,)))
+    assert fed.plan.dims == (8,)
+    after = jax.tree.leaves((out.params, out.momentum, out.pipe))
+    for x, y in zip(before, after):
+        assert bool((x == y).all())
+    fed.step(out)                       # still steps cleanly
+
+
+def test_regroup_rejects_membership_changes():
+    fed = Federation(FederationConfig(n_peers=8, technique="mar",
+                                      task="text"))
+    state = fed.init_state()
+    with pytest.raises(ValueError, match="regroup"):
+        fed.regroup(state, plan_grid(12))
+
+
+def test_scheduled_regroup_5cubed_to_5_25_survivor_parity():
+    """The ISSUE acceptance scenario: 125 = 5^3 regroups to (5, 25)
+    mid-run with no membership change; full participation keeps every
+    exact grid at the exact global mean, so the regrouped run tracks
+    the static one, and the transcript bytes match the mask-aware
+    oracle on the new grid."""
+    from repro.core import topology
+    base = FederationConfig(n_peers=125, technique="mar", task="text",
+                            seed=5)
+    sched = dataclasses.replace(
+        base, adaptive_m="schedule",
+        adaptive_m_params={"schedule": ((0, (5, 25)),)})
+    feds, states = {}, {}
+    for name, cfg in (("static", base), ("sched", sched)):
+        fed = Federation(cfg)
+        state = fed.init_state()
+        for _ in range(3):
+            state = fed.step(state)
+        feds[name], states[name] = fed, state
+    fed = feds["sched"]
+    assert fed.plan.dims == (5, 25)
+    assert fed.regroup_log == [(0, (5, 5, 5), (5, 25))]
+    # survivor parity: same exact global mean as the never-regrouped run
+    for a, b in zip(jax.tree.leaves(states["sched"].params),
+                    jax.tree.leaves(states["static"].params)):
+        np.testing.assert_allclose(a, b, atol=2e-6)
+    # byte accounting on the regrouped grid still matches the oracle
+    mask = np.ones(125, np.float32)
+    oracle = topology.mar_bytes(125, fed.plan, fed.model_bytes,
+                                mask=mask)
+    assert abs(fed.last_transcript.total_bytes - oracle) < 1.0
+
+
+def test_tail_aware_regroups_under_wireless_tail():
+    """End-to-end: heterogeneous wireless links trigger a shrink and
+    byte parity holds on the post-regroup grid."""
+    from repro.core import topology
+    cfg = FederationConfig(
+        n_peers=27, technique="mar", task="text", seed=2,
+        link_profile="wireless", adaptive_m="tail_aware",
+        adaptive_m_params={"window": 2, "cooldown": 0})
+    fed = Federation(cfg)
+    state = fed.init_state()
+    for _ in range(6):
+        state = fed.step(state)
+    assert fed.regroup_log, "wireless tail never triggered a regroup"
+    t, old, new = fed.regroup_log[0]
+    assert max(new) < max(old)
+    mask = np.ones(27, np.float32)
+    oracle = topology.mar_bytes(27, fed.plan, fed.model_bytes,
+                                mask=mask)
+    assert abs(fed.last_transcript.total_bytes - oracle) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# planner regressions (ISSUE 5 bugfix)
+# ---------------------------------------------------------------------------
+
+def test_plan_grid_rejects_undersized_explicit_grid():
+    with pytest.raises(ValueError, match="capacity"):
+        plan_grid(10, group_size=3, depth=2)     # 9 < 10
+    with pytest.raises(ValueError, match="capacity"):
+        plan_grid(125, group_size=5, depth=2)    # 25 < 125
+
+
+def test_plan_grid_honors_explicit_grid():
+    assert plan_grid(8, group_size=2, depth=3).dims == (2, 2, 2)
+    assert plan_grid(125, group_size=5, depth=3).dims == (5, 5, 5)
+    # padding is fine as long as the capacity holds N
+    p = plan_grid(10, group_size=4, depth=2)
+    assert p.dims == (4, 4) and p.capacity == 16
+
+
+def test_plan_grid_depth_zero_is_explicit_not_unset():
+    with pytest.raises(ValueError, match="depth"):
+        plan_grid(8, group_size=2, depth=0)
+    with pytest.raises(ValueError, match="depth"):
+        plan_grid(8, depth=0)
+
+
+def test_plan_grid_group_size_alone_still_autodeepens():
+    assert plan_grid(125, group_size=5).dims == (5, 5, 5)
+    assert plan_grid(125, group_size=3).dims == (3,) * 5
+
+
+# ---------------------------------------------------------------------------
+# launch-path validation (ISSUE 5 bugfix)
+# ---------------------------------------------------------------------------
+
+def test_planned_resizes_from_schedule():
+    from repro.runtime.lifecycle import build_lifecycle
+    lc = build_lifecycle(None, 8, schedule=((5, 12), (9, 6)))
+    assert lc.planned_resizes(0, 20) == [(5, 12), (9, 6)]
+    assert lc.planned_resizes(0, 5) == []
+    assert lc.planned_resizes(6, 20) == [(9, 6)]
+
+
+def test_planned_resizes_from_trace_is_pure(tmp_path):
+    from repro.runtime.lifecycle import (MembershipEvent, build_lifecycle,
+                                         save_trace)
+    path = str(tmp_path / "trace.jsonl")
+    save_trace(path, [MembershipEvent(2, "join", (8, 9)),
+                      MembershipEvent(4, "leave", (9,))])
+    lc = build_lifecycle("trace", 8, churn_params={"path": path})
+    assert lc.planned_resizes(0, 10) == [(2, 10), (4, 9)]
+    # pure look-ahead: the live model state is untouched
+    assert lc.planned_resizes(0, 10) == [(2, 10), (4, 9)]
+    assert lc.model.n_peers == 8

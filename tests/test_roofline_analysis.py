@@ -30,9 +30,6 @@ def test_raw_cost_analysis_misses_scan_trips():
     assert ca["flops"] == pytest.approx(one, rel=0.05)      # NOT 10x
 
 
-@pytest.mark.xfail(reason="pre-existing scan-trip accounting gap: "
-                   "analyze_text undercounts scanned-body FLOPs "
-                   "(EXPERIMENTS.md §Roofline)", strict=True)
 def test_analyzer_multiplies_scan_trips():
     a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
 
@@ -46,9 +43,6 @@ def test_analyzer_multiplies_scan_trips():
     assert r["flops"] == pytest.approx(10 * 2 * 256 ** 3, rel=0.05)
 
 
-@pytest.mark.xfail(reason="pre-existing scan-trip accounting gap: "
-                   "remat recompute not folded into trip counts "
-                   "(EXPERIMENTS.md §Roofline)", strict=True)
 def test_analyzer_counts_remat_recompute():
     """grad of checkpointed scan: fwd + recompute + 2 bwd matmuls per
     layer ~= 4x forward FLOPs — the 'useful fraction' denominator."""
@@ -65,9 +59,6 @@ def test_analyzer_counts_remat_recompute():
     assert r["flops"] == pytest.approx(4 * 8 * 2 * 128 ** 3, rel=0.15)
 
 
-@pytest.mark.xfail(reason="pre-existing scan-trip accounting gap: "
-                   "nested trip counts don't multiply "
-                   "(EXPERIMENTS.md §Roofline)", strict=True)
 def test_nested_scan_trips_multiply():
     a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
 
