@@ -5,9 +5,21 @@ wireless-FL literature argues per-round *timing* over heterogeneous
 links is what actually limits scale. This benchmark unrolls one FL
 iteration of every registered technique into messages
 (``core/transport.py``), times them over the lognormal-wireless link
-profile with the discrete-event simulator (``runtime/network.py``),
-and reports measured bytes + simulated seconds per iteration across
-N in {8, 16, 64, 125}.
+profile, and reports measured bytes + simulated seconds per iteration
+across N in {8 .. 65536}.
+
+Three engines cover the range:
+
+- ``heap``   — per-message discrete-event sim (``runtime/network.py``);
+  run alongside the vector engine at N <= 125 as a byte- and
+  time-exact parity cross-check.
+- ``vector`` — batched segment-op sim (``runtime/vector_network.py``)
+  over ``ArrayMessagePlan``; the default whenever the plan
+  materializes under the message budget.
+- ``closed`` — O(N)/O(N * chunk) closed forms for the two O(N^2)
+  baselines (``all_to_all_seconds`` / ``ring_seconds``) past the
+  budget, cross-checked against the materialized engine at small N in
+  tests; bytes for those rows come from the analytic oracle.
 
 Expected shape, from uplink serialization alone: MAR sends G*(M-1)
 models per peer, so its per-iteration wall-clock grows ~log N, while
@@ -15,14 +27,19 @@ AR's N-1 sends per peer grow ~N — the byte gap becomes a time gap on
 the *same* links. Measured bytes are cross-checked against the
 analytic oracles (``core/topology.py``) row by row (loss=0 parity).
 
+Also measures the heap-vs-vector engine speedup on one MAR iteration
+at N=1024 (the ISSUE-6 acceptance number) and emits it as a
+``speedup`` row + ``mar_n1024_speedup`` summary key.
+
 Emits CSV rows plus ``BENCH_comm.json`` (bytes + simulated seconds per
-technique per N) so the perf trajectory has machine-readable data
-points.
+technique per N, MAR-vs-AR growth ratios at large N) so the perf
+trajectory has machine-readable data points.
 """
 from __future__ import annotations
 
 import json
 import sys
+import time
 
 import numpy as np
 
@@ -30,9 +47,57 @@ from benchmarks.common import emit, std_argparser
 from repro.core import topology
 from repro.core.aggregation import TECHNIQUES, make_aggregator
 from repro.core.moshpit import plan_grid
+from repro.core.transport import build_array_plan
 from repro.runtime.network import NetworkSim
+from repro.runtime.vector_network import (VectorNetworkSim,
+                                          all_to_all_seconds,
+                                          ring_seconds)
 
 ORDER = ("fedavg", "hierarchical", "mar", "gossip", "rdfl", "ar")
+
+#: above this many messages a plan is not materialized; the O(N^2)
+#: baselines switch to their closed-form engines instead
+MSG_BUDGET = 2_000_000
+#: at or below this N the heap engine re-runs every plan as an exact
+#: parity cross-check against the vector engine
+PARITY_MAX_N = 125
+#: the acceptance-criterion speedup measurement point
+SPEEDUP_N = 1024
+
+
+def _est_messages(tech: str, plan) -> int:
+    """Message-count upper bound, cheap enough to decide the engine
+    *before* building anything."""
+    n = plan.n_peers
+    if tech in ("ar", "rdfl"):
+        return n * (n - 1)
+    if tech == "gossip":
+        return n * max(1, int(np.ceil(np.log2(max(n, 2)))))
+    if tech == "mar":
+        return plan.capacity * sum(m - 1 for m in plan.dims)
+    return 2 * n                          # fedavg / hierarchical
+
+
+def _measure_speedup(n: int, profile: str, model_bytes: float,
+                     seed: int, reps: int = 3):
+    """Best-of-``reps`` wall time for one MAR iteration, heap vs
+    vector, on identical links + plans."""
+    plan = plan_grid(n)
+    agg = make_aggregator("mar", plan)
+    mplan = agg.message_plan(None, model_bytes)
+    aplan = build_array_plan("mar", plan, None, model_bytes,
+                             num_rounds=agg.num_rounds)
+    heap = NetworkSim(n, profile=profile, seed=seed)
+    vec = VectorNetworkSim(n, profile=profile, seed=seed)
+    t_heap = min(_timed(heap.run, mplan) for _ in range(reps))
+    t_vec = min(_timed(vec.run, aplan) for _ in range(reps))
+    return t_heap, t_vec
+
+
+def _timed(fn, *a):
+    t0 = time.perf_counter()
+    fn(*a)
+    return time.perf_counter() - t0
 
 
 def main(argv=None) -> int:
@@ -47,11 +112,11 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.smoke:
-        peer_counts = (8, 16)
+        peer_counts = (8, 16, 1024)
     elif args.full:
-        peer_counts = (8, 16, 64, 125, 512)
+        peer_counts = (8, 16, 64, 125, 512, 1024, 8192, 65536)
     else:
-        peer_counts = (8, 16, 64, 125)
+        peer_counts = (8, 16, 64, 125, 1024, 8192, 65536)
     model_bytes = args.model_mb * 1e6
 
     techniques = [t for t in ORDER if t in TECHNIQUES] + \
@@ -63,27 +128,59 @@ def main(argv=None) -> int:
         mask = np.ones(n, np.float32)
         for tech in techniques:
             agg = make_aggregator(tech, plan)
-            mplan = agg.message_plan(mask, model_bytes)
-            net = NetworkSim(n, profile=args.profile, seed=args.seed)
-            # links are fixed per sim and loss only matters on lossy
-            # profiles, so the last transcript serves for bytes too
-            transcripts = [net.run(mplan) for _ in range(args.iters)]
-            tr = transcripts[-1]
             analytic = topology.iteration_bytes(
                 tech, n, model_bytes, plan, num_rounds=agg.num_rounds)
-            sim_s = float(np.mean([t.iteration_s for t in transcripts]))
-            per_iter_s[(tech, n)] = sim_s
-            row = dict(technique=tech, n_peers=n, grid=str(plan.dims),
-                       messages=mplan.n_messages,
-                       bytes=int(tr.total_bytes),
-                       analytic_bytes=int(analytic),
-                       parity=abs(tr.total_bytes - analytic) < 1.0,
-                       sim_s=round(sim_s, 4))
+            est = _est_messages(tech, plan)
+            if est > MSG_BUDGET:
+                # O(N^2) baseline past the budget: closed-form engine
+                closed = {"ar": all_to_all_seconds,
+                          "rdfl": ring_seconds}[tech]
+                links = VectorNetworkSim(
+                    n, profile=args.profile, seed=args.seed).links
+                sim_s, _ = closed(links, model_bytes)
+                row = dict(technique=tech, n_peers=n,
+                           grid=str(plan.dims), engine="closed",
+                           messages=est, bytes=int(analytic),
+                           analytic_bytes=int(analytic), parity=True,
+                           sim_s=round(sim_s, 4))
+            else:
+                aplan = build_array_plan(tech, plan, mask, model_bytes,
+                                         num_rounds=agg.num_rounds)
+                vec = VectorNetworkSim(n, profile=args.profile,
+                                       seed=args.seed)
+                transcripts = [vec.run(aplan)
+                               for _ in range(args.iters)]
+                tr = transcripts[-1]
+                parity = abs(tr.total_bytes - analytic) < 1.0
+                engine = "vector"
+                if n <= PARITY_MAX_N:
+                    # heap cross-check: byte-exact AND time-equal
+                    heap = NetworkSim(n, profile=args.profile,
+                                      seed=args.seed)
+                    mplan = agg.message_plan(mask, model_bytes)
+                    for t_vec in transcripts:
+                        t_heap = heap.run(mplan)
+                        same = (t_heap.total_bytes == t_vec.total_bytes
+                                and t_heap.round_s == t_vec.round_s
+                                and np.array_equal(t_heap.peer_finish_s,
+                                                   t_vec.peer_finish_s))
+                        parity = parity and same
+                    engine = "vector+heap"
+                sim_s = float(np.mean([t.iteration_s
+                                       for t in transcripts]))
+                row = dict(technique=tech, n_peers=n,
+                           grid=str(plan.dims), engine=engine,
+                           messages=aplan.n_messages,
+                           bytes=int(tr.total_bytes),
+                           analytic_bytes=int(analytic), parity=parity,
+                           sim_s=round(sim_s, 4))
+            per_iter_s[(tech, n)] = row["sim_s"]
             emit("wallclock", **row)
             results.append(row)
 
     # acceptance summary: growth factor from the smallest to the
-    # largest N — MAR should track ~log N, AR ~N, on identical links
+    # largest N — MAR should track ~log N, AR ~N, on identical links —
+    # plus the AR/MAR wall-clock ratio at every large N
     lo, hi = peer_counts[0], peer_counts[-1]
     summary = {}
     for tech in ("mar", "ar"):
@@ -92,6 +189,20 @@ def main(argv=None) -> int:
                 per_iter_s[(tech, hi)] / per_iter_s[(tech, lo)], 2)
     summary["n_growth"] = round(hi / lo, 2)
     summary["logn_growth"] = round(np.log2(hi) / np.log2(lo), 2)
+    for n in peer_counts:
+        if n >= 1024 and per_iter_s.get(("mar", n), 0) > 0:
+            summary[f"ar_over_mar_n{n}"] = round(
+                per_iter_s[("ar", n)] / per_iter_s[("mar", n)], 2)
+
+    if SPEEDUP_N in peer_counts:
+        t_heap, t_vec = _measure_speedup(
+            SPEEDUP_N, args.profile, model_bytes, args.seed)
+        speedup = round(t_heap / t_vec, 1)
+        summary[f"mar_n{SPEEDUP_N}_speedup"] = speedup
+        emit("speedup", n_peers=SPEEDUP_N, technique="mar",
+             heap_ms=round(t_heap * 1e3, 2),
+             vector_ms=round(t_vec * 1e3, 2), speedup=speedup)
+
     emit("wallclock_summary", profile=args.profile, n_lo=lo, n_hi=hi,
          **summary)
 

@@ -132,11 +132,14 @@ class FederationConfig:
     link_params: Optional[Dict[str, Any]] = None
     # transport backend executing the per-step message plans
     # (runtime/transport_base.py): "sim" models them over the link
-    # profile above; "socket" runs every peer as an asyncio task on
-    # loopback TCP and really transmits int8-serialized update tensors
-    # — identical transcript shape, so the ledger, churn demotion and
-    # history are backend-agnostic (link_profile/link_params apply to
-    # "sim" only; "socket" keeps just the loss rate as injection).
+    # profile above; "vector_sim" is the batched segment-op engine —
+    # byte- and time-identical transcripts, orders of magnitude faster
+    # at large N (runtime/vector_network.py); "socket" runs every peer
+    # as an asyncio task on loopback TCP and really transmits
+    # int8-serialized update tensors — identical transcript shape, so
+    # the ledger, churn demotion and history are backend-agnostic
+    # (link_profile/link_params apply to the sims only; "socket" keeps
+    # just the loss rate as injection).
     transport: str = "sim"
     seed: int = 0
 

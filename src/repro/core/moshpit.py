@@ -114,9 +114,13 @@ def plan_grid(n_peers: int, group_size: int | None = None,
     Priority: (1) honor explicit (group_size, depth) — and *honor*
     means honor: a (g, d) whose capacity ``g**d`` cannot hold N peers
     is a ValueError, never a silently deepened grid; (2) find uniform
-    M^d == N exactly (paper's optimal setup, e.g. 125 = 5^3); (3) smallest
-    capacity M^d >= N with M in [3..8] (padding with virtual dropped slots
-    — the appendix's approximate-aggregation regime).
+    M^d == N exactly with M <= 8 (paper's optimal setup, e.g.
+    125 = 5^3; 65536 = 2^16); (3) near-balanced mixed-radix grid: for
+    each depth take M = ceil(N^(1/d)) and demote trailing rounds to
+    M-1 while capacity still covers N, then keep the (capacity, cost,
+    depth)-minimal candidate — e.g. 10 -> (3, 2, 2), 100 -> (5, 5, 4).
+    The winner provably pads by less than one grid row; a clear
+    ValueError (not a degenerate deep grid) is raised otherwise.
     """
     if depth is not None and depth < 1:
         # 0 is an explicit (invalid) request, not "unset"
@@ -137,22 +141,44 @@ def plan_grid(n_peers: int, group_size: int | None = None,
     if depth is not None:
         m = max(2, math.ceil(n_peers ** (1.0 / depth)))
         return GridPlan(n_peers, (m,) * depth)
+    if n_peers < 2:
+        return GridPlan(n_peers, (2,))
     # exact factorization M^d == N, prefer smaller M (less per-round traffic)
-    for m in range(2, n_peers + 1):
+    for m in range(2, min(n_peers, 8) + 1):
         d = round(math.log(n_peers, m))
         for dd in (d, d + 1):
             if dd >= 1 and m ** dd == n_peers:
-                if m == n_peers and dd == 1 and n_peers > 8:
-                    continue  # one giant group = all-to-all; keep searching
                 return GridPlan(n_peers, (m,) * dd)
-    # no exact power: minimal capacity >= N over M in [3..8]
-    best = None
-    for m in range(3, 9):
-        d = max(1, math.ceil(math.log(n_peers, m)))
-        cap = m ** d
-        cost = cap * d * (m - 1)  # per-iteration pairwise exchanges
-        if best is None or (cap, cost) < (best.capacity, best_cost):
-            best, best_cost = GridPlan(n_peers, (m,) * d), cost
+    # no exact power with M <= 8: near-balanced mixed-radix grid.  For
+    # each depth d take the smallest M with M^d >= N and demote as many
+    # trailing rounds as possible from M to M-1 while capacity still
+    # covers N; rank candidates by (capacity, pairwise-exchange cost,
+    # depth).  Because M was minimal, at least one round keeps M, so
+    # padding < capacity / M — never a full grid row of virtual slots.
+    best: GridPlan | None = None
+    best_key = None
+    for d in range(2, max(2, math.ceil(math.log2(n_peers))) + 1):
+        m = 2
+        while m ** d < n_peers:
+            m += 1
+        if m > 8:
+            continue
+        dims = [m] * d
+        if m > 2:
+            for k in range(1, d):
+                cand = [m] * (d - k) + [m - 1] * k
+                if int(np.prod(cand)) < n_peers:
+                    break
+                dims = cand
+        cap = int(np.prod(dims))
+        key = (cap, cap * sum(g - 1 for g in dims), d)
+        if best_key is None or key < best_key:
+            best, best_key = GridPlan(n_peers, tuple(dims)), key
+    if best is None or (best.capacity - n_peers
+                        >= best.capacity // best.dims[0]):
+        raise ValueError(
+            f"no auto-sized grid for N={n_peers} pads by less than one "
+            f"grid row; pass an explicit (group_size, depth)")
     return best
 
 

@@ -91,15 +91,18 @@ def main(argv=None) -> int:
                     help="iterations without a heartbeat before a peer "
                          "is marked dead")
     ap.add_argument("--transport", default=None,
-                    choices=["sim", "socket"],
+                    choices=["sim", "vector_sim", "socket"],
                     help="MessagePlan executor backend "
                          "(runtime/transport_base.py): 'sim' models "
-                         "messages over --link-profile links; 'socket' "
-                         "runs every peer as an asyncio task on "
-                         "loopback TCP and really transmits "
-                         "int8-serialized update tensors. Default: "
-                         "'sim' when --link-profile is given, else no "
-                         "transport (analytic accounting)")
+                         "messages over --link-profile links; "
+                         "'vector_sim' is the batched segment-op "
+                         "engine with identical transcripts (use for "
+                         "large --peers); 'socket' runs every peer as "
+                         "an asyncio task on loopback TCP and really "
+                         "transmits int8-serialized update tensors. "
+                         "Default: 'sim' when --link-profile is "
+                         "given, else no transport (analytic "
+                         "accounting)")
     ap.add_argument("--link-profile", default=None,
                     choices=["uniform", "wireless", "regions"],
                     help="discrete-event link model for the sim "

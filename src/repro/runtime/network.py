@@ -53,7 +53,8 @@ from typing import Any, Dict, List, Optional, Tuple, Type
 import numpy as np
 
 from repro.core.transport import Message, MessagePlan
-from repro.runtime.transport_base import (Transcript, Transport,
+from repro.runtime.transport_base import (LinkAccounting, Transcript,
+                                          Transport,
                                           demote_lost_senders,
                                           register_transport)
 
@@ -304,6 +305,7 @@ class NetworkSim(Transport):
                 compute_s[:n_real]
         tr = Transcript(technique=plan.technique,
                         lost_senders=np.zeros(n_real, bool))
+        acct = LinkAccounting(n_nodes, n_real)
 
         def up(i):
             return links.up[i] if i < n_real else np.inf
@@ -327,9 +329,7 @@ class NetworkSim(Transport):
                 rbytes += msg.nbytes
                 tr.total_bytes += msg.nbytes
                 tr.n_messages += 1
-                key = (msg.src, msg.dst)
-                tr.bytes_by_link[key] = \
-                    tr.bytes_by_link.get(key, 0.0) + msg.nbytes
+                acct.add(msg.src, msg.dst, msg.nbytes)
                 if msg.src == msg.dst:
                     continue               # loopback: billed, instant
                 bw = min(up(msg.src), down(msg.dst))
@@ -360,6 +360,7 @@ class NetworkSim(Transport):
 
         tr.peer_finish_s = ready[:n_real].copy()
         tr.iteration_s = float(ready.max()) if n_nodes else 0.0
+        acct.finalize(tr)
         self._split_kd_bytes(tr, plan)
         self.clock += tr.iteration_s
         self.iterations += 1

@@ -38,6 +38,12 @@ from repro.core.transport import Message, MessagePlan
 # the transcript — the one shape every backend emits
 # ---------------------------------------------------------------------------
 
+#: above this peer count, per-(src, dst) link accounting is aggregated
+#: into per-peer totals + a top-k heavy-link dict — the dense dict is
+#: O(N^2) entries and dominates memory long before the event engine does
+LINK_DETAIL_MAX_PEERS = 512
+
+
 @dataclasses.dataclass
 class Transcript:
     """What one FL iteration actually did on the wire.
@@ -51,6 +57,15 @@ class Transcript:
     ledger's per-source accounting. ``payload_bytes`` counts the actual
     octets a real transport moved through its frames (0 for the
     simulator).
+
+    Per-link accounting has two modes (``link_mode``). ``"exact"`` —
+    the small-N default — fills ``bytes_by_link`` with every (src, dst)
+    pair. Above :data:`LINK_DETAIL_MAX_PEERS` peers the backends switch
+    to ``"peer"``: ``tx_bytes_by_peer`` / ``rx_bytes_by_peer`` carry
+    exact per-node totals, and ``bytes_by_link`` keeps only the top-k
+    heavy links (exact totals unless the deferred link buffer had to be
+    compacted — see :class:`LinkAccounting` — in which case per-link
+    values are a lower bound, never an overcount).
     """
 
     technique: str
@@ -68,6 +83,11 @@ class Transcript:
         default_factory=lambda: np.zeros(0, bool))
     kd_bytes: float = 0.0
     payload_bytes: float = 0.0
+    link_mode: str = "exact"
+    tx_bytes_by_peer: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+    rx_bytes_by_peer: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
 
     @property
     def n_dropped(self) -> int:
@@ -83,6 +103,112 @@ class Transcript:
         if f.size == 0:
             return 0.0, 0.0
         return float(np.median(f)), float(f.max())
+
+
+class LinkAccounting:
+    """Per-link byte accounting with an automatic large-N mode.
+
+    At or below ``detail_max`` peers (default
+    :data:`LINK_DETAIL_MAX_PEERS`) every (src, dst) pair is tracked —
+    the exact dict the calibration gates and small-N tests compare.
+    Above it, the accounting keeps exact per-node tx/rx totals, and
+    per-link detail is deferred: each round appends its raw
+    ``(key, bytes)`` arrays and :meth:`finalize` merges them once into
+    exact per-link totals before taking the top ``top_k``. Only when
+    the deferred buffer exceeds ``compact_at`` entries is it compacted
+    down to a bounded candidate set — from then on the reported top-k
+    is a per-link lower bound (a link must stay heavy to stay
+    tracked), which keeps memory O(bound) on plans whose *distinct
+    link count* itself is O(N^2).
+    """
+
+    def __init__(self, n_nodes: int, n_peers: int,
+                 detail_max: Optional[int] = None, top_k: int = 32,
+                 compact_at: int = 4_000_000):
+        self.n_nodes = n_nodes
+        self.top_k = top_k
+        self.compact_at = compact_at
+        if detail_max is None:
+            detail_max = LINK_DETAIL_MAX_PEERS
+        self.exact = n_peers <= detail_max
+        self.links: Dict[Tuple[int, int], float] = {}
+        if not self.exact:
+            self.tx = np.zeros(n_nodes)
+            self.rx = np.zeros(n_nodes)
+            self._keys: List[np.ndarray] = []
+            self._sums: List[np.ndarray] = []
+            self._pending = 0
+
+    def add(self, src: int, dst: int, nbytes: float) -> None:
+        """Scalar path (the per-message heap / socket engines)."""
+        if self.exact:
+            key = (src, dst)
+            self.links[key] = self.links.get(key, 0.0) + nbytes
+        else:
+            self.tx[src] += nbytes
+            self.rx[dst] += nbytes
+            self._keys.append(np.asarray([src * self.n_nodes + dst]))
+            self._sums.append(np.asarray([float(nbytes)]))
+            self._pending += 1
+            if self._pending > self.compact_at:
+                self._compact()
+
+    def add_batch(self, src: np.ndarray, dst: np.ndarray,
+                  nbytes: np.ndarray) -> None:
+        """Array path (the vectorized engine): one call per round."""
+        if src.size == 0:
+            return
+        if self.exact:
+            keys = src * self.n_nodes + dst
+            uniq, inv = np.unique(keys, return_inverse=True)
+            sums = np.bincount(inv, weights=nbytes, minlength=uniq.size)
+            links = self.links
+            for k, v in zip(uniq.tolist(), sums.tolist()):
+                kk = (k // self.n_nodes, k % self.n_nodes)
+                links[kk] = links.get(kk, 0.0) + v
+            return
+        self.tx += np.bincount(src, weights=nbytes,
+                               minlength=self.n_nodes)
+        self.rx += np.bincount(dst, weights=nbytes,
+                               minlength=self.n_nodes)
+        self._keys.append(src * self.n_nodes + dst)
+        self._sums.append(np.asarray(nbytes, float))
+        self._pending += src.size
+        if self._pending > self.compact_at:
+            self._compact()
+
+    def _merge(self) -> Tuple[np.ndarray, np.ndarray]:
+        keys = np.concatenate(self._keys) if self._keys else \
+            np.empty(0, np.int64)
+        sums = np.concatenate(self._sums) if self._sums else \
+            np.empty(0)
+        uniq, inv = np.unique(keys, return_inverse=True)
+        return uniq, np.bincount(inv, weights=sums,
+                                 minlength=uniq.size)
+
+    def _compact(self, bound: int = 65536) -> None:
+        uniq, sums = self._merge()
+        if uniq.size > bound:
+            top = np.argpartition(sums, -bound)[-bound:]
+            uniq, sums = uniq[top], sums[top]
+        self._keys, self._sums = [uniq], [sums]
+        self._pending = uniq.size
+
+    def finalize(self, tr: "Transcript") -> None:
+        if self.exact:
+            tr.bytes_by_link = self.links
+            return
+        tr.link_mode = "peer"
+        tr.tx_bytes_by_peer = self.tx
+        tr.rx_bytes_by_peer = self.rx
+        uniq, sums = self._merge()
+        if uniq.size > self.top_k:
+            top = np.argpartition(sums, -self.top_k)[-self.top_k:]
+            uniq, sums = uniq[top], sums[top]
+        order = np.argsort(-sums, kind="stable")
+        tr.bytes_by_link = {
+            (int(k) // self.n_nodes, int(k) % self.n_nodes): float(v)
+            for k, v in zip(uniq[order], sums[order])}
 
 
 def demote_lost_senders(a: np.ndarray, u: np.ndarray,
@@ -189,11 +315,14 @@ def build_transport(name: str, n_peers: int, *,
     """Build a registered transport backend by name.
 
     ``"sim"`` — the discrete-event simulator over modeled links;
-    ``"socket"`` — real asyncio tasks over loopback TCP.
+    ``"vector_sim"`` — the same link model timed with batched numpy
+    segment ops (the large-N engine, byte-exact and time-equal vs
+    ``"sim"``); ``"socket"`` — real asyncio tasks over loopback TCP.
     """
     # importing the implementations registers them; lazy to avoid the
     # transport_base <-> network import cycle
-    from repro.runtime import network, socket_transport  # noqa: F401
+    from repro.runtime import (network, socket_transport,  # noqa: F401
+                               vector_network)
     if name not in TRANSPORTS:
         raise ValueError(f"unknown transport {name!r}; "
                          f"registered: {sorted(TRANSPORTS)}")

@@ -1,0 +1,295 @@
+"""Vectorized large-N event engine: batched round timing in numpy.
+
+The heap-ordered :class:`~repro.runtime.network.NetworkSim` walks one
+Python loop iteration and one heap push/pop per message — O(messages ·
+log messages) interpreter work that caps every benchmark near N=125.
+This module times the *same* plans with numpy segment ops, one batch
+per round, and registers the result as the ``"vector_sim"`` transport
+backend, scaling the simulation to N=65536 (ROADMAP: three orders of
+magnitude past the heap engine).
+
+The timing model is the heap engine's, computed in array form and
+bit-for-bit equal on the overlap (``tests/test_vector_network.py``
+pins every technique at N <= 125):
+
+* *uplink serialization* — within a round, a sender's transmissions
+  drain its uplink in plan order. The per-sender start times are
+  seeded sequential prefix sums: messages are stably sorted by sender,
+  packed into a ``[senders, max_fanout]`` rectangle whose column 0 is
+  the sender's ready time, and one ``np.cumsum(axis=1)`` reproduces
+  the heap engine's chain ``ready ⊕ o_1 ⊕ o_2 ...`` exactly (cumsum
+  accumulates sequentially; padding zeros are exact no-ops).
+* *arrival* — send start + transfer at the slower endpoint + both
+  endpoints' propagation, same expression, same evaluation order.
+* *loss* — one ``rng.random(k)`` per round consumes the identical
+  Generator stream as the heap engine's per-message draws (numpy fills
+  batched doubles from the same bit stream), so seeded drops — and the
+  ``demote_lost_senders`` masks downstream — match message for
+  message.
+* *barriers* — per-node ready times advance to max(uplink drain,
+  last surviving arrival); rounds chain through those ready times, so
+  group waits, ring hops and hierarchy barriers emerge exactly as in
+  the heap engine.
+
+For the two techniques whose *plans* are O(N^2) messages (all-to-all
+AR-FL, and RDFL's N-1 ring hops) the module also provides closed-form
+engines (:func:`all_to_all_seconds`, :func:`ring_seconds`) that apply
+the same model without materializing messages — benchmarks use them
+past a message budget, cross-checked against the materialized engine
+at overlapping sizes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.transport import (ArrayMessagePlan, Message, MessagePlan)
+from repro.runtime.network import LinkModel, build_link_model
+from repro.runtime.transport_base import (LinkAccounting, Transcript,
+                                          Transport, register_transport)
+
+__all__ = ["VectorNetworkSim", "all_to_all_seconds", "ring_seconds"]
+
+
+def _extended_links(links: LinkModel, n_nodes: int
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray]:
+    """Per-node link arrays with infrastructure rows appended:
+    unbounded bandwidth, zero latency, lossless."""
+    n_real = links.n_peers
+    up = np.full(n_nodes, np.inf)
+    down = np.full(n_nodes, np.inf)
+    lat = np.zeros(n_nodes)
+    loss = np.zeros(n_nodes)
+    up[:n_real] = links.up
+    down[:n_real] = links.down
+    lat[:n_real] = links.lat
+    loss[:n_real] = links.loss
+    return up, down, lat, loss
+
+
+@register_transport
+class VectorNetworkSim(Transport):
+    """Array-native message timing over a :class:`LinkModel` — the
+    ``"vector_sim"`` transport backend.
+
+    Accepts :class:`ArrayMessagePlan` directly (the large-N hot path)
+    or any :class:`MessagePlan` (converted once, losslessly). The
+    transcript schema, clock accumulation, resize semantics and
+    ``from_config`` surface are identical to the heap ``"sim"``
+    backend, so ``FederationConfig(transport="vector_sim")`` drops in —
+    the ``GroupSizeController``, ``CommLedger`` and
+    ``record_transcript`` consumers run unchanged.
+    """
+
+    name = "vector_sim"
+
+    def __init__(self, n_peers: int, profile: str = "uniform",
+                 seed: int = 0,
+                 link_params: Optional[Dict[str, Any]] = None,
+                 links: Optional[LinkModel] = None):
+        self.links = links if links is not None else build_link_model(
+            profile, n_peers, seed=seed, **(link_params or {}))
+        self.seed = seed
+        self.clock = 0.0
+        self.iterations = 0
+
+    @classmethod
+    def from_config(cls, n_peers, *, profile=None, seed=0,
+                    link_params=None, **kwargs):
+        return cls(n_peers, profile=profile or "uniform", seed=seed,
+                   link_params=link_params, **kwargs)
+
+    @property
+    def n_peers(self) -> int:
+        return self.links.n_peers
+
+    @property
+    def lossless(self) -> bool:
+        return not self.links.loss.any()
+
+    def resize(self, new_n: int) -> None:
+        self.links.resize(new_n)
+
+    # ------------------------------------------------------------------
+    def run(self, plan: Any,
+            compute_s: Optional[np.ndarray] = None,
+            payloads: Optional[Any] = None) -> Transcript:
+        """Simulate one iteration's plan, one vector batch per round."""
+        if not isinstance(plan, ArrayMessagePlan):
+            plan = ArrayMessagePlan.from_plan(plan)
+        links = self.links
+        n_real = links.n_peers
+        n_nodes = max(plan.n_nodes, n_real)
+        rng = np.random.default_rng(
+            (self.seed + 1) * 48611 + self.iterations)
+        up, down, lat, loss = _extended_links(links, n_nodes)
+
+        ready = np.zeros(n_nodes)
+        if compute_s is not None:
+            ready[:min(n_real, len(compute_s))] = compute_s[:n_real]
+        tr = Transcript(technique=plan.technique,
+                        lost_senders=np.zeros(n_real, bool))
+        acct = LinkAccounting(n_nodes, n_real)
+
+        for r in range(plan.n_rounds):
+            src, dst, nb = plan.round_arrays(r)
+            tr.n_messages += src.size
+            rbytes = float(nb.sum())
+            tr.total_bytes += rbytes
+            acct.add_batch(src, dst, nb)
+            nz = src != dst                  # loopback: billed, instant
+            s, d, b = src[nz], dst[nz], nb[nz]
+            if s.size == 0:
+                tr.bytes_by_round.append(rbytes)
+                tr.round_s.append(float(ready.max()))
+                continue
+            # seeded Bernoulli loss, one batch on the heap engine's
+            # exact draw stream (message order, loopbacks skipped)
+            p_loss = 1.0 - (1.0 - loss[s]) * (1.0 - loss[d])
+            lost = rng.random(s.size) < p_loss
+            # uplink serialization: stable sort by sender packs each
+            # sender's messages (plan order preserved) into one row of
+            # a [senders, fanout+1] rectangle seeded with its ready
+            # time; a single sequential cumsum along the row is the
+            # heap engine's ready ⊕ o_1 ⊕ o_2 ... chain, bit for bit
+            occ = b / up[s]                  # inf uplink -> 0.0
+            order = np.argsort(s, kind="stable")
+            ss = s[order]
+            boundary = np.empty(ss.size, bool)
+            boundary[0] = True
+            np.not_equal(ss[1:], ss[:-1], out=boundary[1:])
+            seg_first = np.flatnonzero(boundary)
+            seg_id = np.cumsum(boundary) - 1
+            pos = np.arange(ss.size) - seg_first[seg_id]
+            n_seg, fan = seg_first.size, int(pos.max()) + 1
+            rect = np.zeros((n_seg, fan + 1))
+            senders = ss[seg_first]
+            rect[:, 0] = ready[senders]
+            rect[seg_id, pos + 1] = occ[order]
+            chain = np.cumsum(rect, axis=1)
+            ds = d[order]
+            start = chain[seg_id, pos]       # send start, sorted order
+            arrival = start + (b[order] / np.minimum(up[ss], down[ds]))
+            arrival = arrival + lat[ss]
+            arrival = arrival + lat[ds]
+            # drain: every node advances to max(ready, uplink busy);
+            # survivors' arrivals then lift their receiver
+            new_ready = ready.copy()
+            new_ready[senders] = np.maximum(ready[senders],
+                                            chain[:, fan])
+            kept = ~lost
+            arr_plan_order = np.empty(s.size)
+            arr_plan_order[order] = arrival
+            np.maximum.at(new_ready, d[kept], arr_plan_order[kept])
+            ready = new_ready
+            tr.bytes_by_round.append(rbytes)
+            tr.round_s.append(float(ready.max()))
+            if lost.any():
+                ls, ld, lb = s[lost], d[lost], b[lost]
+                tr.dropped.extend(
+                    Message(int(a), int(bb), float(c))
+                    for a, bb, c in zip(ls, ld, lb))
+                tr.lost_senders[ls[ls < n_real]] = True
+
+        tr.peer_finish_s = ready[:n_real].copy()
+        tr.iteration_s = float(ready.max()) if n_nodes else 0.0
+        acct.finalize(tr)
+        self._split_kd_bytes(tr, plan)
+        self.clock += tr.iteration_s
+        self.iterations += 1
+        return tr
+
+
+# ---------------------------------------------------------------------------
+# closed-form engines for O(N^2)-message techniques
+# ---------------------------------------------------------------------------
+
+def _active_ready(links: LinkModel, mask: Optional[np.ndarray],
+                  compute_s: Optional[np.ndarray]
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    n = links.n_peers
+    if mask is None:
+        active = np.arange(n)
+    else:
+        active = np.flatnonzero(np.asarray(mask)[:n] > 0)
+    ready = np.zeros(n)
+    if compute_s is not None:
+        ready[:min(n, len(compute_s))] = compute_s[:n]
+    if links.loss.any():
+        raise ValueError(
+            "closed-form engines require lossless links (per-message "
+            "loss draws need the materialized plan's RNG stream); got "
+            "a lossy profile — materialize the plan instead")
+    return active, ready
+
+
+def all_to_all_seconds(links: LinkModel, model_bytes: float,
+                       mask: Optional[np.ndarray] = None,
+                       compute_s: Optional[np.ndarray] = None,
+                       chunk: int = 256
+                       ) -> Tuple[float, np.ndarray]:
+    """One AR-FL iteration's (iteration_s, peer_finish_s) without
+    materializing its O(N^2) messages.
+
+    Applies the vector engine's model to ``ar_plan``'s structure —
+    sender-major message order, so sender ``s``'s k-th transmission
+    starts ``k`` uplink drains after its ready time — in sender chunks
+    of O(chunk * N) memory. Start offsets use ``k * occupy`` instead of
+    a sequential chain (float-associativity differences land at ~1e-12
+    relative; cross-checked against the materialized engine in tests).
+    """
+    active, ready = _active_ready(links, mask, compute_s)
+    k = active.size
+    finish = ready.copy()
+    if k < 2:
+        return (float(finish.max()) if finish.size else 0.0,
+                finish)
+    up, down, lat = links.up, links.down, links.lat
+    occ = model_bytes / up[active]
+    # receiver index k(s, d): position of d in s's ascending dst scan
+    # (self skipped) = rank(d) - (rank(d) > rank(s))
+    rank = np.arange(k)
+    drain = ready[active] + (k - 1) * occ
+    peer_best = np.full(k, -np.inf)
+    for lo in range(0, k, chunk):
+        sl = slice(lo, min(lo + chunk, k))
+        s_ids = active[sl]
+        idx = rank[None, :] - (rank[None, :] > rank[sl, None])
+        start = ready[s_ids, None] + idx * occ[sl, None]
+        tx = model_bytes / np.minimum(up[s_ids, None],
+                                      down[active][None, :])
+        arr = start + tx + lat[s_ids, None] + lat[active][None, :]
+        # a peer never "arrives" to itself
+        arr[rank[sl, None] == rank[None, :]] = -np.inf
+        np.maximum(peer_best, arr.max(axis=0), out=peer_best)
+    finish[active] = np.maximum(drain, peer_best)
+    return float(finish.max()), finish
+
+
+def ring_seconds(links: LinkModel, model_bytes: float,
+                 mask: Optional[np.ndarray] = None,
+                 compute_s: Optional[np.ndarray] = None
+                 ) -> Tuple[float, np.ndarray]:
+    """One RDFL iteration's (iteration_s, peer_finish_s) by iterating
+    the k-1 ring hops as O(k) vector recurrences instead of O(k^2)
+    materialized messages: each hop, every active peer forwards one
+    full model to its successor, and a hop cannot leave before the
+    previous one arrived."""
+    active, ready = _active_ready(links, mask, compute_s)
+    k = active.size
+    if k < 2:
+        return (float(ready.max()) if ready.size else 0.0, ready)
+    up, down, lat = (links.up[active], links.down[active],
+                     links.lat[active])
+    r = ready[active]
+    occ = model_bytes / up
+    tx = model_bytes / np.minimum(up, np.roll(down, -1))
+    hop_lat = lat + np.roll(lat, -1)
+    for _ in range(k - 1):
+        arrival = r + tx + hop_lat
+        r = np.maximum(r + occ, np.roll(arrival, 1))
+    finish = ready.copy()
+    finish[active] = r
+    return float(finish.max()), finish

@@ -76,7 +76,7 @@ def test_mar_bytes_countonly_no_longer_overbills():
 def test_mar_mask_parity_padded_grid():
     """Non-exact grids (capacity > N) pad with virtual slots; the
     mask-aware analytic and the transcript agree there too."""
-    plan = plan_grid(10)                 # 4x4 capacity over 10 peers
+    plan = plan_grid(10)                 # (3, 2, 2): 12 slots, 10 peers
     assert plan.capacity > plan.n_peers
     mask = np.ones(10, np.float32)
     agg = make_aggregator("mar", plan)

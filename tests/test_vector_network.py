@@ -1,0 +1,359 @@
+"""Heap-vs-vectorized engine parity (ISSUE 6 acceptance).
+
+The ``vector_sim`` backend must be a drop-in for the heap ``sim``
+backend, not an approximation of it: for every registered technique at
+every overlapping N the two produce byte-exact transcripts (totals,
+per-round, per-link) and *equal* — not merely close — round and
+per-peer finish times, including under churn masks, seeded loss +
+demotion, MKD prefix rounds and compute skew. The suite also pins the
+array-form planners to the ``Message``-list planners element by
+element, the lossless closed-form O(N^2) engines to the materialized
+engine, and the aggregated large-N link accounting to the exact mode.
+"""
+import numpy as np
+import pytest
+
+from repro.core import transport
+from repro.core.aggregation import TECHNIQUES, build_pipeline, \
+    make_aggregator
+from repro.core.federation import Federation, FederationConfig
+from repro.core.moshpit import plan_grid
+from repro.core.transport import (ArrayMessagePlan, build_array_plan,
+                                  with_mkd_traffic_arrays)
+from repro.runtime.network import NetworkSim, build_link_model
+from repro.runtime.transport_base import (LINK_DETAIL_MAX_PEERS,
+                                          LinkAccounting, TRANSPORTS,
+                                          Transcript, build_transport)
+from repro.runtime.vector_network import (VectorNetworkSim,
+                                          all_to_all_seconds,
+                                          ring_seconds)
+
+MB = 10_000   # model-state bytes per transfer (small, exact in float)
+
+PARITY_NS = (8, 27, 64, 125)
+
+
+def _plans(tech, n, mask=None, model_bytes=MB):
+    plan = plan_grid(n)
+    agg = make_aggregator(tech, plan)
+    if mask is None:
+        mask = np.ones(n, np.float32)
+    mplan = agg.message_plan(mask, model_bytes)
+    aplan = build_array_plan(tech, plan, mask, model_bytes,
+                             num_rounds=agg.num_rounds)
+    return mplan, aplan
+
+
+def _assert_equal_transcripts(th: Transcript, tv: Transcript):
+    """Byte-exact AND time-equal — the drop-in contract."""
+    assert tv.technique == th.technique
+    assert tv.n_messages == th.n_messages
+    assert tv.total_bytes == th.total_bytes
+    assert tv.bytes_by_round == th.bytes_by_round
+    assert tv.bytes_by_link == th.bytes_by_link
+    assert tv.kd_bytes == th.kd_bytes
+    assert tv.round_s == th.round_s                 # exact, not approx
+    assert np.array_equal(tv.peer_finish_s, th.peer_finish_s)
+    assert tv.iteration_s == th.iteration_s
+    assert np.array_equal(tv.lost_senders, th.lost_senders)
+    assert (sorted((m.src, m.dst, m.nbytes) for m in tv.dropped)
+            == sorted((m.src, m.dst, m.nbytes) for m in th.dropped))
+
+
+def _run_both(mplan, aplan, n, profile="wireless", seed=0,
+              link_params=None, compute_s=None, iters=1):
+    heap = NetworkSim(n, profile=profile, seed=seed,
+                      link_params=link_params)
+    vec = VectorNetworkSim(n, profile=profile, seed=seed,
+                           link_params=link_params)
+    out = []
+    for _ in range(iters):
+        out.append((heap.run(mplan, compute_s=compute_s),
+                    vec.run(aplan, compute_s=compute_s)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# array planners == list planners, message for message
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", PARITY_NS)
+@pytest.mark.parametrize("tech", sorted(TECHNIQUES))
+def test_array_plan_equals_list_plan(tech, n):
+    mplan, aplan = _plans(tech, n)
+    back = aplan.to_plan()
+    assert len(back.rounds) == len(mplan.rounds)
+    for r in range(len(mplan.rounds)):
+        assert ([(m.src, m.dst, m.nbytes) for m in back.rounds[r]]
+                == [(m.src, m.dst, m.nbytes) for m in mplan.rounds[r]])
+    assert aplan.n_nodes == mplan.n_nodes
+    assert aplan.total_bytes == pytest.approx(mplan.total_bytes)
+
+
+@pytest.mark.parametrize("tech", sorted(TECHNIQUES))
+def test_array_plan_mask_aware(tech):
+    rng = np.random.default_rng(5)
+    for seed in range(4):
+        mask = (rng.random(27) < 0.6).astype(np.float32)
+        if mask.sum() < 2:
+            continue
+        mplan, aplan = _plans(tech, 27, mask=mask)
+        assert ([(m.src, m.dst, m.nbytes)
+                 for r in aplan.to_plan().rounds for m in r]
+                == [(m.src, m.dst, m.nbytes)
+                    for r in mplan.rounds for m in r])
+
+
+def test_array_plan_roundtrip_lossless():
+    mplan, _ = _plans("mar", 27)
+    ap = ArrayMessagePlan.from_plan(mplan)
+    back = ap.to_plan()
+    assert back.kd_rounds == mplan.kd_rounds
+    assert back.n_messages == mplan.n_messages
+    for ra, rb in zip(back.rounds, mplan.rounds):
+        assert [(m.src, m.dst, m.nbytes) for m in ra] \
+            == [(m.src, m.dst, m.nbytes) for m in rb]
+
+
+def test_array_plan_mkd_prefix_matches_list():
+    plan = plan_grid(27)
+    pipe = build_pipeline("mar", plan)
+    mask = np.ones(27, np.float32)
+    mplan = pipe.message_plan(mask, MB, 27, use_kd=True,
+                              kd_logit_bytes=256)
+    aplan = with_mkd_traffic_arrays(
+        build_array_plan("mar", plan, mask, MB), plan, mask, MB, 256)
+    assert aplan.kd_rounds == mplan.kd_rounds == plan.depth
+    assert ([(m.src, m.dst, m.nbytes)
+             for r in aplan.to_plan().rounds for m in r]
+            == [(m.src, m.dst, m.nbytes)
+                for r in mplan.rounds for m in r])
+
+
+# ---------------------------------------------------------------------------
+# heap-vs-vector transcript parity (the acceptance property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", PARITY_NS)
+@pytest.mark.parametrize("tech", sorted(TECHNIQUES))
+def test_engines_agree_full_participation(tech, n):
+    mplan, aplan = _plans(tech, n)
+    for th, tv in _run_both(mplan, aplan, n, iters=2):
+        _assert_equal_transcripts(th, tv)
+
+
+@pytest.mark.parametrize("profile", ["uniform", "wireless", "regions"])
+def test_engines_agree_across_profiles(profile):
+    mplan, aplan = _plans("mar", 64)
+    (th, tv), = _run_both(mplan, aplan, 64, profile=profile, seed=3)
+    _assert_equal_transcripts(th, tv)
+
+
+@pytest.mark.parametrize("tech", sorted(TECHNIQUES))
+def test_engines_agree_under_churn(tech):
+    rng = np.random.default_rng(11)
+    for _ in range(3):
+        mask = (rng.random(27) < 0.7).astype(np.float32)
+        if mask.sum() < 2:
+            continue
+        mplan, aplan = _plans(tech, 27, mask=mask)
+        (th, tv), = _run_both(mplan, aplan, 27, seed=1)
+        _assert_equal_transcripts(th, tv)
+
+
+@pytest.mark.parametrize("tech", sorted(TECHNIQUES))
+def test_engines_agree_seeded_loss_and_demotion(tech):
+    """Same seed -> same Bernoulli stream -> identical dropped
+    messages and identical demoted-sender flags."""
+    mplan, aplan = _plans(tech, 27)
+    runs = _run_both(mplan, aplan, 27, profile="uniform", seed=2,
+                     link_params={"loss": 0.3}, iters=3)
+    assert any(th.n_dropped > 0 for th, _ in runs)
+    for th, tv in runs:
+        _assert_equal_transcripts(th, tv)
+
+
+def test_engines_agree_mkd_prefix_rounds():
+    plan = plan_grid(27)
+    pipe = build_pipeline("mar", plan)
+    mask = np.ones(27, np.float32)
+    mplan = pipe.message_plan(mask, MB, 27, use_kd=True,
+                              kd_logit_bytes=256)
+    aplan = ArrayMessagePlan.from_plan(mplan)
+    (th, tv), = _run_both(mplan, aplan, 27)
+    assert th.kd_bytes > 0
+    _assert_equal_transcripts(th, tv)
+
+
+def test_engines_agree_compute_skew():
+    mplan, aplan = _plans("mar", 8)
+    slow = np.zeros(8)
+    slow[5] = 100.0
+    (th, tv), = _run_both(mplan, aplan, 8, compute_s=slow)
+    assert th.iteration_s > 100.0
+    _assert_equal_transcripts(th, tv)
+
+
+def test_vector_accepts_list_plan_directly():
+    mplan, _ = _plans("mar", 8)
+    th = NetworkSim(8, "uniform", seed=0).run(mplan)
+    tv = VectorNetworkSim(8, "uniform", seed=0).run(mplan)
+    _assert_equal_transcripts(th, tv)
+
+
+# ---------------------------------------------------------------------------
+# closed-form O(N^2) engines vs the materialized engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [8, 64, 125])
+def test_all_to_all_closed_form_matches_materialized(n):
+    mplan, aplan = _plans("ar", n)
+    vec = VectorNetworkSim(n, "wireless", seed=0)
+    tr = vec.run(aplan)
+    it_s, finish = all_to_all_seconds(vec.links, MB)
+    assert it_s == pytest.approx(tr.iteration_s, rel=1e-9)
+    np.testing.assert_allclose(finish, tr.peer_finish_s, rtol=1e-9)
+
+
+@pytest.mark.parametrize("n", [8, 64, 125])
+def test_ring_closed_form_matches_materialized(n):
+    mplan, aplan = _plans("rdfl", n)
+    vec = VectorNetworkSim(n, "wireless", seed=0)
+    tr = vec.run(aplan)
+    it_s, finish = ring_seconds(vec.links, MB)
+    assert it_s == pytest.approx(tr.iteration_s, rel=1e-9)
+    np.testing.assert_allclose(finish, tr.peer_finish_s, rtol=1e-9)
+
+
+def test_closed_form_respects_masks():
+    mask = np.ones(27, np.float32)
+    mask[[3, 9, 20]] = 0.0
+    mplan, aplan = _plans("ar", 27, mask=mask)
+    vec = VectorNetworkSim(27, "wireless", seed=4)
+    tr = vec.run(aplan)
+    it_s, _ = all_to_all_seconds(vec.links, MB, mask=mask)
+    assert it_s == pytest.approx(tr.iteration_s, rel=1e-9)
+
+
+def test_closed_form_rejects_lossy_links():
+    links = build_link_model("uniform", 8, loss=0.2)
+    with pytest.raises(ValueError, match="lossless"):
+        all_to_all_seconds(links, MB)
+    with pytest.raises(ValueError, match="lossless"):
+        ring_seconds(links, MB)
+
+
+# ---------------------------------------------------------------------------
+# aggregated link accounting above the peer-count threshold
+# ---------------------------------------------------------------------------
+
+def test_link_accounting_exact_mode_below_threshold():
+    acct = LinkAccounting(10, 10)
+    assert acct.exact
+    acct.add(0, 1, 5.0)
+    acct.add_batch(np.array([0, 2]), np.array([1, 3]),
+                   np.array([7.0, 2.0]))
+    tr = Transcript(technique="mar")
+    acct.finalize(tr)
+    assert tr.link_mode == "exact"
+    assert tr.bytes_by_link == {(0, 1): 12.0, (2, 3): 2.0}
+
+
+def test_link_accounting_peer_mode_totals_and_topk():
+    n = LINK_DETAIL_MAX_PEERS + 4
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, n, 4000)
+    dst = rng.integers(0, n, 4000)
+    nb = rng.integers(1, 100, 4000).astype(float)
+    acct = LinkAccounting(n, n, top_k=8)
+    assert not acct.exact
+    for lo in range(0, 4000, 500):       # several "rounds"
+        sl = slice(lo, lo + 500)
+        acct.add_batch(src[sl], dst[sl], nb[sl])
+    tr = Transcript(technique="mar")
+    acct.finalize(tr)
+    assert tr.link_mode == "peer"
+    # per-peer totals are exact
+    np.testing.assert_allclose(
+        tr.tx_bytes_by_peer,
+        np.bincount(src, weights=nb, minlength=n))
+    np.testing.assert_allclose(
+        tr.rx_bytes_by_peer,
+        np.bincount(dst, weights=nb, minlength=n))
+    # the top-k dict is the true heaviest links, exactly summed
+    exact = {}
+    for s, d, b in zip(src, dst, nb):
+        exact[(int(s), int(d))] = exact.get((int(s), int(d)), 0.0) + b
+    want = dict(sorted(exact.items(), key=lambda kv: -kv[1])[:8])
+    assert len(tr.bytes_by_link) == 8
+    assert set(tr.bytes_by_link) <= set(exact)
+    assert sorted(tr.bytes_by_link.values(), reverse=True) \
+        == pytest.approx(sorted(want.values(), reverse=True))
+
+
+def test_link_accounting_compaction_keeps_heavy_links():
+    """Past ``compact_at`` the deferred buffer is compacted; heavy
+    links must survive with their full totals."""
+    n = LINK_DETAIL_MAX_PEERS + 4
+    acct = LinkAccounting(n, n, top_k=4, compact_at=100)
+    heavy = (np.array([1]), np.array([2]), np.array([1e9]))
+    for _ in range(10):
+        acct.add_batch(*heavy)
+        acct.add_batch(np.arange(60), np.arange(60) + 1,
+                       np.ones(60))
+    tr = Transcript(technique="mar")
+    acct.finalize(tr)
+    assert tr.bytes_by_link[(1, 2)] == pytest.approx(1e10)
+
+
+def test_vector_sim_switches_to_peer_mode_at_large_n():
+    n = LINK_DETAIL_MAX_PEERS * 2
+    plan = plan_grid(n)
+    aplan = build_array_plan("mar", plan, None, MB)
+    tr = VectorNetworkSim(n, "uniform", seed=0).run(aplan)
+    assert tr.link_mode == "peer"
+    assert tr.bytes_by_link and len(tr.bytes_by_link) <= 32
+    assert tr.tx_bytes_by_peer.sum() == pytest.approx(tr.total_bytes)
+    assert tr.rx_bytes_by_peer.sum() == pytest.approx(tr.total_bytes)
+    # totals still match the analytic shape: every peer sends G models
+    assert tr.total_bytes == plan.capacity * sum(
+        m - 1 for m in plan.dims) * MB
+
+
+# ---------------------------------------------------------------------------
+# transport registry + federation seam
+# ---------------------------------------------------------------------------
+
+def test_vector_sim_registered_and_buildable():
+    assert "vector_sim" in TRANSPORTS
+    t = build_transport("vector_sim", 16, profile="wireless", seed=7)
+    assert isinstance(t, VectorNetworkSim)
+    assert t.n_peers == 16
+    t.resize(32)
+    assert t.n_peers == 32
+
+
+def test_vector_sim_clock_accumulates():
+    mplan, aplan = _plans("mar", 8)
+    vec = VectorNetworkSim(8, "uniform", seed=0)
+    t1 = vec.run(aplan)
+    t2 = vec.run(aplan)
+    assert vec.iterations == 2
+    assert vec.clock == pytest.approx(t1.iteration_s + t2.iteration_s)
+
+
+def test_federation_runs_on_vector_transport():
+    """FederationConfig(transport="vector_sim") is a drop-in: same
+    measured bytes and simulated seconds as the heap backend."""
+    outs = {}
+    for backend in ("sim", "vector_sim"):
+        cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                               link_profile="wireless",
+                               transport=backend, seed=3)
+        fed = Federation(cfg)
+        state = fed.init_state()
+        for _ in range(2):
+            state = fed.step(state)
+        outs[backend] = (fed.comm_bytes, fed.sim_seconds,
+                         fed.last_transcript.n_messages)
+    assert outs["vector_sim"] == outs["sim"]
