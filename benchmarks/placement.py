@@ -1,0 +1,247 @@
+"""Placement-aware vs random grid coordinates, in simulated seconds.
+
+The ROADMAP's topology-aware placement item, measured: the
+``clustered`` :class:`~repro.core.placement.PlacementPolicy` learns
+network regions from landmark probe rounds over the live links and
+regroups the MAR grid so each region fills contiguous coordinates —
+against ``random`` coordinates (the misalignment control) and
+``identity`` (today's raw-index behavior) on identical links.
+
+The regions cells run with ``shuffle=True`` — peers joined in
+arbitrary order, so raw indices interleave regions and every one of
+the d rounds crosses the 5 Mbit/s WAN; aligned placement collapses
+cross-region traffic into the top axes. Two N=125 grids are reported:
+the planner's (5, 5, 5), where 4 regions cannot tile 25-slot blocks
+and the mixed block bounds the win (~1.15x), and (2,)*7 — the grid
+``tail_aware`` adaptive-M converges to at N=125 (BENCH_adaptive_m) —
+where alignment is structurally possible and the acceptance gate
+(clustered >= 1.3x over random) applies. The wireless profile has no
+pair structure, so placement is provably neutral there (per-peer-only
+costs make iteration time permutation-invariant) — those rows document
+that placement never *hurts*.
+
+Byte accounting stays honest throughout: placement changes *when*
+traffic crosses the WAN, never *how much*, so after every iteration —
+including every post-regroup one — the transcript's total bytes are
+cross-checked against ``topology.mar_bytes``; any mismatch fails the
+benchmark. Probe traffic is billed separately (``probe_bytes`` /
+``probe_s`` columns), never hidden in the steady-state numbers.
+
+A combined cell runs ``clustered`` placement and the ``tail_aware``
+group-size controller in the same loop (the federation's composition
+order) and must at least match adaptive-M alone.
+
+Emits CSV rows plus ``BENCH_placement.json``; exits nonzero on any
+byte-parity failure, a sub-1.3x gate cell, or a combined run that
+loses to adaptive-M alone.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import emit, std_argparser
+from repro.core import topology
+from repro.core.adaptive import build_controller
+from repro.core.aggregation import make_aggregator
+from repro.core.moshpit import GridPlan, plan_grid
+from repro.core.placement import build_placement
+from repro.runtime.network import NetworkSim
+
+PROFILES = ("regions", "wireless")
+GATE_SPEEDUP = 1.3
+#: regions cells scatter region assignment over peer indices — the
+#: misaligned world placement exists for (aligned raw indices would
+#: make identity coincidentally optimal and the benchmark vacuous)
+REGION_PARAMS = {"shuffle": True}
+
+
+def run_cell(n: int, profile: str, seed: int, iters: int,
+             model_bytes: float, placement: Optional[str] = None,
+             dims: Optional[tuple] = None,
+             adaptive: bool = False) -> dict:
+    """One cell: ``iters`` MAR iterations over one NetworkSim, with an
+    optional placement policy (and optional tail_aware controller) in
+    the loop. Links are drawn from (profile, n, seed) alone, so every
+    arm of a cell times its messages over identical links."""
+    link_params = REGION_PARAMS if profile == "regions" else None
+    net = NetworkSim(n, profile=profile, seed=seed,
+                     link_params=link_params)
+    plan = plan_grid(n) if dims is None else GridPlan(n, tuple(dims))
+    mask = np.ones(n, np.float32)
+    probe = {"bytes": 0.0, "s": 0.0}
+
+    def prober(mplan):
+        tr = net.run(mplan)
+        probe["bytes"] += tr.total_bytes
+        probe["s"] += tr.iteration_s
+        return tr
+
+    policy = None
+    if placement is not None:
+        policy = build_placement(placement, plan, seed=seed)
+        policy.bind_prober(prober)
+    controller = build_controller("tail_aware", plan) if adaptive \
+        else None
+
+    per_iter, moves, regroups = [], 0, 0
+    parity_ok = True
+    for t in range(iters):
+        agg = make_aggregator("mar", plan)
+        tr = net.run(agg.message_plan(mask, model_bytes))
+        per_iter.append(tr.iteration_s)
+        # any permutation preserves bytes — checked vs the analytic
+        # oracle after every iteration, post-regroup included
+        oracle = topology.mar_bytes(n, plan, model_bytes, mask=mask)
+        if abs(tr.total_bytes - oracle) >= 1.0:
+            parity_ok = False
+        if controller is not None:
+            proposal = controller.observe(t, tr, plan)
+            if proposal is not None and \
+                    tuple(proposal.dims) != tuple(plan.dims):
+                plan = proposal
+                regroups += 1
+                if policy is not None:
+                    policy.rebind(plan)
+        if policy is not None:
+            target = policy.observe(t, tr, plan)
+            if target is not None and target != plan:
+                plan = target
+                moves += 1
+    steady_k = max(iters // 3, 1)
+    out = {
+        "n_peers": n, "profile": profile,
+        "placement": placement or "identity",
+        "dims_final": list(plan.dims),
+        "iters": iters,
+        "steady_s": float(np.mean(per_iter[-steady_k:])),
+        "total_s": float(np.sum(per_iter)),
+        "probe_bytes": probe["bytes"], "probe_s": probe["s"],
+        "placement_moves": moves, "regroups": regroups,
+        "byte_parity": parity_ok,
+    }
+    labels = getattr(policy, "labels", None)
+    truth = net.links.peer_attrs().get("region")
+    if labels is not None and truth is not None:
+        purity = sum(int(np.bincount(truth[labels == c]).max())
+                     for c in np.unique(labels))
+        out["purity"] = purity / n
+    return out
+
+
+def main(argv=None) -> int:
+    ap = std_argparser(__doc__)
+    ap.add_argument("--model-mb", type=float, default=10.0,
+                    help="state bytes per transfer (theta + momentum)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="iterations per cell")
+    ap.add_argument("--out", default="BENCH_placement.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        peer_counts, iters = (8, 16), args.iters or 8
+    else:
+        peer_counts, iters = (27, 64, 125), args.iters or 24
+    model_bytes = args.model_mb * 1e6
+
+    # (n, dims) cells: the planner's grid everywhere, plus the
+    # adaptive-M converged (2,)*7 grid at N=125 — the acceptance gate
+    # cell (on (5, 5, 5), 4 regions cannot tile 25-slot blocks, so the
+    # mixed block structurally bounds the win; reported honestly)
+    cells = [(n, None) for n in peer_counts]
+    gate_cell = None
+    if 125 in peer_counts:
+        gate_cell = (125, (2,) * 7)
+        cells.append(gate_cell)
+
+    results, summary = [], {}
+    rc = 0
+    for profile in PROFILES:
+        for n, dims in cells:
+            if profile == "wireless" and dims is not None:
+                continue                  # gate grid is a regions cell
+            arms = {
+                name: run_cell(n, profile, args.seed, iters,
+                               model_bytes, placement=name, dims=dims)
+                for name in (None, "random", "clustered")
+            }
+            ident, rand, clust = (arms[None], arms["random"],
+                                  arms["clustered"])
+            vs_random = (rand["steady_s"] / clust["steady_s"]
+                         if clust["steady_s"] > 0 else 1.0)
+            vs_ident = (ident["steady_s"] / clust["steady_s"]
+                        if clust["steady_s"] > 0 else 1.0)
+            parity = all(a["byte_parity"] for a in arms.values())
+            tag = f"{profile}_n{n}" + ("_pow2" if dims else "")
+            row = dict(profile=profile, n_peers=n,
+                       grid=str(tuple(clust["dims_final"])),
+                       identity_steady_s=round(ident["steady_s"], 4),
+                       random_steady_s=round(rand["steady_s"], 4),
+                       clustered_steady_s=round(clust["steady_s"], 4),
+                       clustered_vs_random=round(vs_random, 3),
+                       clustered_vs_identity=round(vs_ident, 3),
+                       probe_mb=round(clust["probe_bytes"] / 1e6, 2),
+                       probe_s=round(clust["probe_s"], 3),
+                       purity=round(clust.get("purity", 0.0), 3),
+                       byte_parity=parity)
+            emit("placement", **row)
+            results.append({"cell": tag, "arms": arms})
+            summary[f"{tag}_clustered_vs_random"] = round(vs_random, 3)
+            summary[f"{tag}_clustered_vs_identity"] = round(vs_ident, 3)
+            if "purity" in clust:
+                summary[f"{tag}_purity"] = round(clust["purity"], 3)
+            if not parity:
+                print(f"# FAIL byte parity at n={n} {profile}",
+                      flush=True)
+                rc = 1
+            if profile == "regions" and (n, dims) == gate_cell \
+                    and vs_random < GATE_SPEEDUP:
+                print(f"# FAIL clustered placement below the "
+                      f"{GATE_SPEEDUP}x gate vs random at N={n} "
+                      f"regions {tuple(clust['dims_final'])} "
+                      f"(got {vs_random:.3f}x)", flush=True)
+                rc = 1
+
+    # composition: clustered placement + tail_aware adaptive-M must at
+    # least match adaptive-M alone on the same links
+    n_hi = peer_counts[-1]
+    adapt = run_cell(n_hi, "regions", args.seed, iters, model_bytes,
+                     adaptive=True)
+    combined = run_cell(n_hi, "regions", args.seed, iters, model_bytes,
+                        placement="clustered", adaptive=True)
+    combo = (adapt["total_s"] / combined["total_s"]
+             if combined["total_s"] > 0 else 1.0)
+    emit("placement_combined", n_peers=n_hi, profile="regions",
+         adaptive_total_s=round(adapt["total_s"], 3),
+         combined_total_s=round(combined["total_s"], 3),
+         combined_vs_adaptive=round(combo, 3),
+         adaptive_dims=str(tuple(adapt["dims_final"])),
+         combined_dims=str(tuple(combined["dims_final"])))
+    results.append({"cell": f"combined_n{n_hi}",
+                    "arms": {"adaptive": adapt, "combined": combined}})
+    summary[f"combined_n{n_hi}_vs_adaptive"] = round(combo, 3)
+    if not (adapt["byte_parity"] and combined["byte_parity"]):
+        print("# FAIL byte parity in the combined cell", flush=True)
+        rc = 1
+    if combo < 0.98:
+        print(f"# FAIL clustered+tail_aware loses to tail_aware alone "
+              f"at N={n_hi} regions ({combo:.3f}x)", flush=True)
+        rc = 1
+    emit("placement_summary", iters=iters, **summary)
+
+    with open(args.out, "w") as f:
+        json.dump({"benchmark": "placement",
+                   "model_bytes": model_bytes,
+                   "iters": iters, "seed": args.seed,
+                   "region_params": REGION_PARAMS,
+                   "summary": summary,
+                   "results": results}, f, indent=2)
+    print(f"# wrote {args.out}", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,6 +25,7 @@ MODULES = [
     "wire_ladder",
     "wallclock_scaling",
     "adaptive_m",
+    "placement",
     "transport_calibration",
     "kernel_bench",
 ]

@@ -137,6 +137,12 @@ def main(argv=None) -> int:
                           "rdfl": ring_seconds}[tech]
                 links = VectorNetworkSim(
                     n, profile=args.profile, seed=args.seed).links
+                if getattr(links, "has_pair_terms", False):
+                    # pairwise WAN terms (regions) are per-(src, dst);
+                    # the closed forms model per-peer costs only
+                    emit("wallclock_skip", technique=tech, n_peers=n,
+                         reason="pair_terms_need_materialized_plan")
+                    continue
                 sim_s, _ = closed(links, model_bytes)
                 row = dict(technique=tech, n_peers=n,
                            grid=str(plan.dims), engine="closed",
@@ -184,13 +190,17 @@ def main(argv=None) -> int:
     lo, hi = peer_counts[0], peer_counts[-1]
     summary = {}
     for tech in ("mar", "ar"):
-        if (tech, lo) in per_iter_s and per_iter_s[(tech, lo)] > 0:
+        # skipped rows (closed-form refused, e.g. regions pair terms)
+        # leave holes — guard every lookup
+        if ((tech, lo) in per_iter_s and (tech, hi) in per_iter_s
+                and per_iter_s[(tech, lo)] > 0):
             summary[f"{tech}_growth"] = round(
                 per_iter_s[(tech, hi)] / per_iter_s[(tech, lo)], 2)
     summary["n_growth"] = round(hi / lo, 2)
     summary["logn_growth"] = round(np.log2(hi) / np.log2(lo), 2)
     for n in peer_counts:
-        if n >= 1024 and per_iter_s.get(("mar", n), 0) > 0:
+        if (n >= 1024 and per_iter_s.get(("mar", n), 0) > 0
+                and ("ar", n) in per_iter_s):
             summary[f"ar_over_mar_n{n}"] = round(
                 per_iter_s[("ar", n)] / per_iter_s[("mar", n)], 2)
 

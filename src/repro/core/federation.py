@@ -97,6 +97,15 @@ class FederationConfig:
     # membership. None disables the hook entirely.
     adaptive_m: Optional[str] = None
     adaptive_m_params: Optional[Dict[str, Any]] = None
+    # topology-aware placement (core/placement.py): a PlacementPolicy
+    # name ("identity" | "random" | "clustered"). The policy consumes
+    # every iteration's transcript and may propose the SAME dims with a
+    # new peer->slot permutation; Federation.regroup applies it as a
+    # membership-preserving regroup. Composes with adaptive_m: after a
+    # dims change the policy rebinds and re-emits its permutation for
+    # the new grid. None disables the hook entirely.
+    placement: Optional[str] = None
+    placement_params: Optional[Dict[str, Any]] = None
     # route the sim MAR masked group mean through the fused Pallas
     # kernel (kernels/group_mean.py) instead of jnp segment sums
     pallas_group_mean: bool = False
@@ -215,12 +224,22 @@ class Federation:
         # (iteration, old_dims, new_dims) of every adaptive regroup
         self.regroup_log: List[Tuple[int, Tuple[int, ...],
                                      Tuple[int, ...]]] = []
+        self.placement_policy = None
+        if cfg.placement is not None:
+            from repro.core.placement import build_placement
+            self.placement_policy = build_placement(
+                cfg.placement, self.plan, seed=cfg.seed,
+                **(cfg.placement_params or {}))
+        # (iteration, peers_moved) of every placement regroup
+        self.placement_log: List[Tuple[int, int]] = []
         self.ledger = CommLedger()
         self.network = build_transport(cfg.transport, cfg.n_peers,
                                        profile=cfg.link_profile,
                                        seed=cfg.seed,
                                        link_params=cfg.link_params)
         self.last_transcript = None
+        if self.placement_policy is not None:
+            self.placement_policy.bind_prober(self._run_probe)
         self.lifecycle = lifecycle if lifecycle is not None else \
             build_lifecycle(cfg.churn, cfg.n_peers, seed=cfg.seed,
                             participation_rate=cfg.participation_rate,
@@ -376,11 +395,28 @@ class Federation:
         if self.controller is not None:
             # new fleet, new candidate ladder — the controller re-anchors
             self.controller.rebind(new_plan)
+        if self.placement_policy is not None:
+            # stale link evidence and permutation sizes are dropped; the
+            # policy re-learns/re-emits for the new fleet
+            self.placement_policy.rebind(new_plan)
         # fresh jit cache: the old traces closed over the old data arrays
         self._it_fn = jax.jit(self._iteration,
                               static_argnames=("use_kd", "do_aggregate"))
         return dataclasses.replace(state, params=params,
                                    momentum=momentum, pipe=pipe)
+
+    # ------------------------------------------------------------------
+    # placement probes (core/placement.py)
+    # ------------------------------------------------------------------
+    def _run_probe(self, mplan) -> Any:
+        """Run a placement probe plan through the live transport and
+        ledger its traffic under its own source. Probe rounds advance
+        the transport's iteration counter (and thus the loss RNG
+        stream) like any other traffic — they are real messages."""
+        tr = self.network.run(mplan)
+        self.ledger.record("placement_probe", tr.total_bytes)
+        self.ledger.record_time(tr.iteration_s)
+        return tr
 
     # ------------------------------------------------------------------
     # adaptive group sizing (same-N regroup, no membership change)
@@ -403,7 +439,9 @@ class Federation:
         from repro.core.adaptive import validate_proposal
         n = self.cfg.n_peers
         validate_proposal(new_plan, n)
-        if tuple(new_plan.dims) == tuple(self.plan.dims):
+        # full-plan equality: a placement-only change (same dims, new
+        # peer->slot permutation) is a real regroup too
+        if new_plan == self.plan:
             return state
         self.plan = new_plan
         self.pipeline = self.pipeline.with_plan(new_plan)
@@ -526,12 +564,25 @@ class Federation:
             # and its proposal regroups before the next iteration
             proposal = self.controller.observe(
                 state.iteration, transcript, self.plan)
-            if proposal is not None and \
-                    tuple(proposal.dims) != tuple(self.plan.dims):
+            if proposal is not None and proposal != self.plan:
                 old_dims = tuple(self.plan.dims)
                 out = self.regroup(out, proposal)
                 self.regroup_log.append(
                     (state.iteration, old_dims, tuple(self.plan.dims)))
+                if self.placement_policy is not None:
+                    # dims changed: the policy re-emits its permutation
+                    # for the new grid on its next observe
+                    self.placement_policy.rebind(self.plan)
+        if self.placement_policy is not None:
+            target = self.placement_policy.observe(
+                state.iteration, transcript, self.plan)
+            if target is not None and target != self.plan:
+                old = self.plan
+                out = self.regroup(out, target)
+                moved = int(np.sum(
+                    old.slot_of(np.arange(old.n_peers))
+                    != self.plan.slot_of(np.arange(old.n_peers))))
+                self.placement_log.append((state.iteration, moved))
         return out
 
     def _kd_logit_bytes(self) -> int:
@@ -586,7 +637,7 @@ def run_federation(cfg: FederationConfig, iterations: int,
     state = fed.init_state()
     hist = {"iteration": [], "accuracy": [], "comm_bytes": [],
             "sim_s": [], "disagreement": [], "n_peers": [], "events": [],
-            "grid": [], "regroups": []}
+            "grid": [], "regroups": [], "placements": []}
     for t in range(iterations):
         state = fed.step(state)
         if (t + 1) % eval_every == 0 or t == iterations - 1:
@@ -600,6 +651,7 @@ def run_federation(cfg: FederationConfig, iterations: int,
             hist["events"].append(len(fed.lifecycle.event_log))
             hist["grid"].append(tuple(fed.plan.dims))
             hist["regroups"].append(len(fed.regroup_log))
+            hist["placements"].append(len(fed.placement_log))
             if verbose:
                 print(f"  it={t+1:4d} acc={acc:.4f} "
                       f"comm={fed.comm_bytes/1e6:.1f}MB "

@@ -17,8 +17,9 @@ churn), so restarts with a different peer count re-factorize cleanly.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,10 +30,37 @@ class GridPlan:
 
     ``dims`` may be heterogeneous (e.g. (2, 4, 4) for a 2-pod mesh whose
     DP axes factor as 4x4) — the paper's M^d is the uniform special case.
+
+    ``placement`` optionally permutes peers onto grid slots:
+    ``placement[peer] = slot`` over all ``capacity`` entities (real
+    peers first, then virtual padding). Every coordinate/key/group query
+    routes through it, so list planners, the vectorized builders, the
+    analytic oracles and both sim engines see one consistent schedule —
+    the hook topology-aware placement (``core/placement.py``) uses to
+    park each network cluster on contiguous low-axis coordinates, the
+    same way ``mesh_grid_plan`` isolates DCN traffic on the pod axis.
+    ``None`` (and the identity permutation, which normalizes to
+    ``None``) is bit-exact with the historical index == coordinate
+    behavior.
     """
 
     n_peers: int               # real peers (<= capacity)
     dims: Tuple[int, ...]      # group size per round; capacity = prod(dims)
+    placement: Optional[Tuple[int, ...]] = None   # entity -> slot
+
+    def __post_init__(self):
+        if self.placement is None:
+            return
+        cap = int(np.prod(self.dims))
+        p = tuple(int(s) for s in self.placement)
+        if len(p) != cap or sorted(p) != list(range(cap)):
+            raise ValueError(
+                f"placement must be a permutation of range({cap}) "
+                f"(entity -> slot over the full grid capacity); got "
+                f"length {len(p)}")
+        if p == tuple(range(cap)):
+            p = None               # identity is the no-placement plan
+        object.__setattr__(self, "placement", p)
 
     @property
     def depth(self) -> int:
@@ -47,10 +75,58 @@ class GridPlan:
         """Exact global average after ``depth`` rounds (no virtual slots)."""
         return self.capacity == self.n_peers
 
+    # -- placement ------------------------------------------------------
+    @functools.cached_property
+    def _slot_of(self) -> np.ndarray:
+        return np.asarray(self.placement, np.int64)
+
+    @functools.cached_property
+    def _entity_at(self) -> np.ndarray:
+        inv = np.empty(self.capacity, np.int64)
+        inv[self._slot_of] = np.arange(self.capacity)
+        return inv
+
+    def with_placement(self, perm) -> "GridPlan":
+        """This grid with a peer→slot permutation applied.
+
+        ``perm`` maps each real peer (length ``n_peers``) — or every
+        capacity entity (length ``capacity``) — to a grid slot; with
+        the short form, virtual entities fill the leftover slots in
+        ascending order. ``None`` clears the placement. The identity
+        permutation normalizes to ``placement=None``, so a cleared and
+        an identity-placed plan compare equal.
+        """
+        if perm is None:
+            return dataclasses.replace(self, placement=None)
+        perm = np.asarray(perm, np.int64)
+        cap = self.capacity
+        if perm.shape == (cap,):
+            full = perm
+        elif perm.shape == (self.n_peers,):
+            full = np.empty(cap, np.int64)
+            full[:self.n_peers] = perm
+            used = np.zeros(cap, bool)
+            used[perm] = True
+            full[self.n_peers:] = np.flatnonzero(~used)
+        else:
+            raise ValueError(
+                f"placement permutation must cover the {self.n_peers} "
+                f"real peers or all {cap} capacity slots; got shape "
+                f"{perm.shape}")
+        return dataclasses.replace(
+            self, placement=tuple(int(s) for s in full))
+
+    def slot_of(self, peer: np.ndarray | int) -> np.ndarray:
+        """Grid slot of each entity (identity without a placement)."""
+        peer = np.asarray(peer)
+        return peer if self.placement is None else self._slot_of[peer]
+
     # -- coordinates ----------------------------------------------------
     def coords(self, peer: np.ndarray | int) -> np.ndarray:
         """Mixed-radix coordinates of peer index; last dim fastest."""
         peer = np.asarray(peer)
+        if self.placement is not None:
+            peer = self._slot_of[peer]
         out = np.empty(peer.shape + (self.depth,), np.int64)
         rem = peer
         for axis in range(self.depth - 1, -1, -1):
@@ -64,6 +140,8 @@ class GridPlan:
         idx = np.zeros(coords.shape[:-1], np.int64)
         for axis in range(self.depth):
             idx = idx * self.dims[axis] + coords[..., axis]
+        if self.placement is not None:
+            idx = self._entity_at[idx]
         return idx
 
     # -- the group-key schedule ------------------------------------------

@@ -87,6 +87,22 @@ def main(argv=None) -> int:
                          "only — the device backend needs capacity == "
                          "N). Requires a transport (--transport / "
                          "--link-profile) for the transcript signal")
+    ap.add_argument("--placement", default=None,
+                    help="topology-aware grid placement "
+                         "(core/placement.py): a PlacementPolicy name "
+                         "(identity | random | clustered). 'clustered' "
+                         "learns network regions from link evidence "
+                         "(probe rounds through the live transport) "
+                         "and regroups the grid so each region fills "
+                         "contiguous coordinates — cross-region "
+                         "traffic collapses into the high axes. "
+                         "Composes with --adaptive-m. Requires a "
+                         "transport (--transport / --link-profile)")
+    ap.add_argument("--link-shuffle", action="store_true",
+                    help="scatter the regions profile's region "
+                         "assignment over peer indices (peers joined "
+                         "in arbitrary order) — the misaligned layout "
+                         "--placement clustered exists to fix")
     ap.add_argument("--health-timeout", type=float, default=30.0,
                     help="iterations without a heartbeat before a peer "
                          "is marked dead")
@@ -176,11 +192,14 @@ def main(argv=None) -> int:
     if transport is not None:
         from repro.runtime.transport_base import (build_transport,
                                                   demote_lost_senders)
+        link_params = {}
+        if args.link_loss:
+            link_params["loss"] = args.link_loss
+        if args.link_shuffle:
+            link_params["shuffle"] = True
         network = build_transport(
             transport, args.peers, profile=args.link_profile,
-            seed=args.seed,
-            link_params={"loss": args.link_loss} if args.link_loss
-            else None)
+            seed=args.seed, link_params=link_params or None)
     # the mask-free fast path needs a genuinely lossless transport too:
     # the regions profile carries per-tier loss even without --link-loss
     always_full = args.churn is None and args.participation >= 1.0 \
@@ -216,6 +235,27 @@ def main(argv=None) -> int:
                      "--link-profile (sim) or --transport socket")
         controller = build_controller(args.adaptive_m, grid,
                                       exact_only=True)
+
+    placement_policy = None
+    if args.placement is not None:
+        from repro.core.placement import PLACEMENTS, build_placement
+        if args.placement not in PLACEMENTS:
+            ap.error(f"--placement must be one of "
+                     f"{sorted(PLACEMENTS)}, got {args.placement!r}")
+        if network is None:
+            ap.error("--placement needs a transport for link evidence "
+                     "and probe rounds: pass --link-profile (sim) or "
+                     "--transport")
+
+        def run_probe(mplan):
+            tr = network.run(mplan)
+            ledger.record("placement_probe", tr.total_bytes)
+            ledger.record_time(tr.iteration_s)
+            return tr
+
+        placement_policy = build_placement(args.placement, grid,
+                                           seed=args.seed)
+        placement_policy.bind_prober(run_probe)
 
     for t in range(start, start + args.steps):
         raw = next(stream)
@@ -275,6 +315,22 @@ def main(argv=None) -> int:
                     print(f"[train] adaptive-M regroup at step {t+1}: "
                           f"{grid.dims} -> {proposal.dims}")
                     grid = proposal
+                    pipeline = pipeline.with_plan(grid)
+                    step_fn = jax.jit(make_fl_train_step(
+                        model, grid, lr=args.lr, pipeline=pipeline))
+                    if placement_policy is not None:
+                        # dims changed: re-emit the permutation for the
+                        # new grid on the next observe
+                        placement_policy.rebind(grid)
+            if placement_policy is not None:
+                target = placement_policy.observe(t, transcript, grid)
+                if target is not None and target != grid:
+                    moved = int(np.sum(
+                        grid.slot_of(np.arange(grid.n_peers))
+                        != target.slot_of(np.arange(grid.n_peers))))
+                    print(f"[train] placement regroup at step {t+1}: "
+                          f"{moved}/{grid.n_peers} peers moved")
+                    grid = target
                     pipeline = pipeline.with_plan(grid)
                     step_fn = jax.jit(make_fl_train_step(
                         model, grid, lr=args.lr, pipeline=pipeline))

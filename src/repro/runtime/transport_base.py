@@ -88,6 +88,24 @@ class Transcript:
         default_factory=lambda: np.zeros(0))
     rx_bytes_by_peer: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0))
+    #: per-link effective seconds: transfer + latency per message
+    #: (arrival - send start, queue wait excluded), summed per
+    #: (src, dst). Loopbacks contribute 0.0; lost messages are billed
+    #: (their airtime was consumed). Follows ``link_mode`` exactly like
+    #: the byte fields: ``"peer"`` mode keeps exact per-node totals in
+    #: ``tx_seconds_by_peer`` / ``rx_seconds_by_peer`` and restricts
+    #: ``link_time_stats`` to the byte top-k's key set. Filled by the
+    #: modeled engines (sim / vector_sim); the socket backend leaves it
+    #: empty — wall-clock per-message timing isn't observable from the
+    #: receiving frame alone. This is the placement layer's evidence
+    #: (``core/placement.py``): seconds-per-byte reveals slow links the
+    #: byte totals can't.
+    link_time_stats: Dict[Tuple[int, int], float] = dataclasses.field(
+        default_factory=dict)
+    tx_seconds_by_peer: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+    rx_seconds_by_peer: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
 
     @property
     def n_dropped(self) -> int:
@@ -132,83 +150,116 @@ class LinkAccounting:
             detail_max = LINK_DETAIL_MAX_PEERS
         self.exact = n_peers <= detail_max
         self.links: Dict[Tuple[int, int], float] = {}
+        self.link_secs: Dict[Tuple[int, int], float] = {}
         if not self.exact:
             self.tx = np.zeros(n_nodes)
             self.rx = np.zeros(n_nodes)
+            self.tx_s = np.zeros(n_nodes)
+            self.rx_s = np.zeros(n_nodes)
             self._keys: List[np.ndarray] = []
             self._sums: List[np.ndarray] = []
+            self._secs: List[np.ndarray] = []
             self._pending = 0
 
-    def add(self, src: int, dst: int, nbytes: float) -> None:
+    def add(self, src: int, dst: int, nbytes: float,
+            seconds: float = 0.0) -> None:
         """Scalar path (the per-message heap / socket engines)."""
         if self.exact:
             key = (src, dst)
             self.links[key] = self.links.get(key, 0.0) + nbytes
+            self.link_secs[key] = self.link_secs.get(key, 0.0) + seconds
         else:
             self.tx[src] += nbytes
             self.rx[dst] += nbytes
+            self.tx_s[src] += seconds
+            self.rx_s[dst] += seconds
             self._keys.append(np.asarray([src * self.n_nodes + dst]))
             self._sums.append(np.asarray([float(nbytes)]))
+            self._secs.append(np.asarray([float(seconds)]))
             self._pending += 1
             if self._pending > self.compact_at:
                 self._compact()
 
     def add_batch(self, src: np.ndarray, dst: np.ndarray,
-                  nbytes: np.ndarray) -> None:
+                  nbytes: np.ndarray,
+                  seconds: Optional[np.ndarray] = None) -> None:
         """Array path (the vectorized engine): one call per round."""
         if src.size == 0:
             return
+        if seconds is None:
+            seconds = np.zeros(src.size)
         if self.exact:
             keys = src * self.n_nodes + dst
             uniq, inv = np.unique(keys, return_inverse=True)
             sums = np.bincount(inv, weights=nbytes, minlength=uniq.size)
-            links = self.links
-            for k, v in zip(uniq.tolist(), sums.tolist()):
+            secs = np.bincount(inv, weights=seconds,
+                               minlength=uniq.size)
+            links, lsecs = self.links, self.link_secs
+            for k, v, s in zip(uniq.tolist(), sums.tolist(),
+                               secs.tolist()):
                 kk = (k // self.n_nodes, k % self.n_nodes)
                 links[kk] = links.get(kk, 0.0) + v
+                lsecs[kk] = lsecs.get(kk, 0.0) + s
             return
         self.tx += np.bincount(src, weights=nbytes,
                                minlength=self.n_nodes)
         self.rx += np.bincount(dst, weights=nbytes,
                                minlength=self.n_nodes)
+        self.tx_s += np.bincount(src, weights=seconds,
+                                 minlength=self.n_nodes)
+        self.rx_s += np.bincount(dst, weights=seconds,
+                                 minlength=self.n_nodes)
         self._keys.append(src * self.n_nodes + dst)
         self._sums.append(np.asarray(nbytes, float))
+        self._secs.append(np.asarray(seconds, float))
         self._pending += src.size
         if self._pending > self.compact_at:
             self._compact()
 
-    def _merge(self) -> Tuple[np.ndarray, np.ndarray]:
+    def _merge(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         keys = np.concatenate(self._keys) if self._keys else \
             np.empty(0, np.int64)
         sums = np.concatenate(self._sums) if self._sums else \
             np.empty(0)
+        secs = np.concatenate(self._secs) if self._secs else \
+            np.empty(0)
         uniq, inv = np.unique(keys, return_inverse=True)
-        return uniq, np.bincount(inv, weights=sums,
-                                 minlength=uniq.size)
+        return (uniq,
+                np.bincount(inv, weights=sums, minlength=uniq.size),
+                np.bincount(inv, weights=secs, minlength=uniq.size))
 
     def _compact(self, bound: int = 65536) -> None:
-        uniq, sums = self._merge()
+        uniq, sums, secs = self._merge()
         if uniq.size > bound:
             top = np.argpartition(sums, -bound)[-bound:]
-            uniq, sums = uniq[top], sums[top]
+            uniq, sums, secs = uniq[top], sums[top], secs[top]
         self._keys, self._sums = [uniq], [sums]
+        self._secs = [secs]
         self._pending = uniq.size
 
     def finalize(self, tr: "Transcript") -> None:
         if self.exact:
             tr.bytes_by_link = self.links
+            tr.link_time_stats = self.link_secs
             return
         tr.link_mode = "peer"
         tr.tx_bytes_by_peer = self.tx
         tr.rx_bytes_by_peer = self.rx
-        uniq, sums = self._merge()
+        tr.tx_seconds_by_peer = self.tx_s
+        tr.rx_seconds_by_peer = self.rx_s
+        uniq, sums, secs = self._merge()
         if uniq.size > self.top_k:
             top = np.argpartition(sums, -self.top_k)[-self.top_k:]
-            uniq, sums = uniq[top], sums[top]
+            uniq, sums, secs = uniq[top], sums[top], secs[top]
+        # one ranking (by bytes) keys both top-k dicts, so the byte and
+        # seconds views of a heavy link stay aligned
         order = np.argsort(-sums, kind="stable")
         tr.bytes_by_link = {
             (int(k) // self.n_nodes, int(k) % self.n_nodes): float(v)
             for k, v in zip(uniq[order], sums[order])}
+        tr.link_time_stats = {
+            (int(k) // self.n_nodes, int(k) % self.n_nodes): float(s)
+            for k, s in zip(uniq[order], secs[order])}
 
 
 def demote_lost_senders(a: np.ndarray, u: np.ndarray,

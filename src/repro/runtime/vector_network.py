@@ -133,18 +133,31 @@ class VectorNetworkSim(Transport):
                         lost_senders=np.zeros(n_real, bool))
         acct = LinkAccounting(n_nodes, n_real)
 
+        pairwise = getattr(links, "has_pair_terms", False)
+
         for r in range(plan.n_rounds):
             src, dst, nb = plan.round_arrays(r)
             tr.n_messages += src.size
             rbytes = float(nb.sum())
             tr.total_bytes += rbytes
-            acct.add_batch(src, dst, nb)
             nz = src != dst                  # loopback: billed, instant
             s, d, b = src[nz], dst[nz], nb[nz]
             if s.size == 0:
+                acct.add_batch(src, dst, nb)
                 tr.bytes_by_round.append(rbytes)
                 tr.round_s.append(float(ready.max()))
                 continue
+            # pairwise WAN terms (regions profile): bandwidth cap +
+            # extra latency on cross-region real-peer pairs; the
+            # neutral (inf, 0.0) fill keeps every other profile's
+            # arithmetic — and transcript — bit-identical
+            cap = np.full(s.size, np.inf)
+            xlat = np.zeros(s.size)
+            if pairwise:
+                both = (s < n_real) & (d < n_real)
+                pc, pl = links.pair_terms(s[both], d[both])
+                cap[both] = pc
+                xlat[both] = pl
             # seeded Bernoulli loss, one batch on the heap engine's
             # exact draw stream (message order, loopbacks skipped)
             p_loss = 1.0 - (1.0 - loss[s]) * (1.0 - loss[d])
@@ -154,7 +167,7 @@ class VectorNetworkSim(Transport):
             # a [senders, fanout+1] rectangle seeded with its ready
             # time; a single sequential cumsum along the row is the
             # heap engine's ready ⊕ o_1 ⊕ o_2 ... chain, bit for bit
-            occ = b / up[s]                  # inf uplink -> 0.0
+            occ = b / np.minimum(up[s], cap)  # inf uplink -> 0.0
             order = np.argsort(s, kind="stable")
             ss = s[order]
             boundary = np.empty(ss.size, bool)
@@ -171,9 +184,11 @@ class VectorNetworkSim(Transport):
             chain = np.cumsum(rect, axis=1)
             ds = d[order]
             start = chain[seg_id, pos]       # send start, sorted order
-            arrival = start + (b[order] / np.minimum(up[ss], down[ds]))
+            arrival = start + (b[order] / np.minimum(
+                np.minimum(up[ss], down[ds]), cap[order]))
             arrival = arrival + lat[ss]
             arrival = arrival + lat[ds]
+            arrival = arrival + xlat[order]   # last, as the heap adds it
             # drain: every node advances to max(ready, uplink busy);
             # survivors' arrivals then lift their receiver
             new_ready = ready.copy()
@@ -183,6 +198,14 @@ class VectorNetworkSim(Transport):
             arr_plan_order = np.empty(s.size)
             arr_plan_order[order] = arrival
             np.maximum.at(new_ready, d[kept], arr_plan_order[kept])
+            # per-message effective seconds (arrival - send start) in
+            # plan order; loopbacks stay 0.0 — same billing as the
+            # heap engine's acct.add(..., arrival - start)
+            start_plan_order = np.empty(s.size)
+            start_plan_order[order] = start
+            secs = np.zeros(src.size)
+            secs[nz] = arr_plan_order - start_plan_order
+            acct.add_batch(src, dst, nb, secs)
             ready = new_ready
             tr.bytes_by_round.append(rbytes)
             tr.round_s.append(float(ready.max()))
@@ -222,6 +245,11 @@ def _active_ready(links: LinkModel, mask: Optional[np.ndarray],
             "closed-form engines require lossless links (per-message "
             "loss draws need the materialized plan's RNG stream); got "
             "a lossy profile — materialize the plan instead")
+    if getattr(links, "has_pair_terms", False):
+        raise ValueError(
+            "closed-form engines model per-peer link terms only; this "
+            "profile carries pairwise (src, dst) costs (e.g. the "
+            "regions WAN cap) — materialize the plan instead")
     return active, ready
 
 

@@ -1,0 +1,361 @@
+"""Topology-aware placement (ISSUE 7 acceptance).
+
+The ``placement`` permutation on :class:`GridPlan` must be invisible
+when identity (bit-exact transcripts on both engines), byte-preserving
+for *any* permutation (``topology.mar_bytes`` stays the oracle), and
+profitable when learned: on the shuffled ``regions`` profile the
+``clustered`` policy must recover the ground-truth region partition
+from probe evidence and strictly beat a random permutation in
+simulated seconds. Also covers the evidence chain the policy runs on —
+``Transcript.link_time_stats`` filled identically by both sim engines,
+the ``bytes_by_link``+``peer_finish_s`` fallback derivation, and
+``LinkModel.peer_attrs`` ground truth.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.aggregation import TECHNIQUES, make_aggregator
+from repro.core.moshpit import GridPlan, plan_grid
+from repro.core.placement import (ClusteredPlacement, PLACEMENTS,
+                                  LinkQualityEstimator, build_placement,
+                                  cluster_permutation, probe_plan)
+from repro.core.transport import build_array_plan
+from repro.runtime.network import NetworkSim, build_link_model
+from repro.runtime.transport_base import (LINK_DETAIL_MAX_PEERS,
+                                          LinkAccounting, Transcript)
+from repro.runtime.vector_network import VectorNetworkSim
+
+MB = 10_000
+SHUF = {"shuffle": True}       # regions scattered over peer indices
+
+
+def _same_transcripts(th: Transcript, tv: Transcript):
+    assert tv.total_bytes == th.total_bytes
+    assert tv.bytes_by_round == th.bytes_by_round
+    assert tv.bytes_by_link == th.bytes_by_link
+    assert tv.round_s == th.round_s
+    assert np.array_equal(tv.peer_finish_s, th.peer_finish_s)
+    assert tv.iteration_s == th.iteration_s
+    assert tv.link_time_stats == th.link_time_stats
+
+
+def _run(plan, n, mask=None, profile="regions", seed=0,
+         link_params=None, engine=NetworkSim, tech="mar", mb=MB):
+    agg = make_aggregator(tech, plan)
+    if mask is None:
+        mask = np.ones(n, np.float32)
+    net = engine(n, profile=profile, seed=seed,
+                 link_params=link_params)
+    return net.run(agg.message_plan(mask, mb)), net
+
+
+# ---------------------------------------------------------------------------
+# GridPlan.placement mechanics
+# ---------------------------------------------------------------------------
+
+def test_identity_placement_normalizes_to_none():
+    plan = plan_grid(27)
+    placed = plan.with_placement(np.arange(27))
+    assert placed.placement is None
+    assert placed == plan
+    assert GridPlan(27, (3, 3, 3),
+                    tuple(range(27))).placement is None
+
+
+def test_placement_validation():
+    with pytest.raises(ValueError, match="permutation"):
+        GridPlan(8, (2, 2, 2), (0, 1))              # wrong length
+    with pytest.raises(ValueError, match="permutation"):
+        GridPlan(8, (2, 2, 2), (0,) * 8)            # duplicates
+    with pytest.raises(ValueError, match="cover"):
+        plan_grid(8).with_placement(np.arange(5))   # bad shape
+    with pytest.raises(ValueError, match="unknown placement"):
+        build_placement("nope", plan_grid(8))
+
+
+def test_short_form_fills_virtual_slots():
+    """A length-n_peers perm over a padded grid parks virtual entities
+    on the leftover slots, ascending."""
+    plan = GridPlan(6, (2, 2, 2))                    # capacity 8
+    placed = plan.with_placement(np.array([7, 0, 1, 2, 3, 4]))
+    assert placed.placement == (7, 0, 1, 2, 3, 4, 5, 6)
+    # round-trip: coords/index stay inverse bijections
+    ent = np.arange(placed.capacity)
+    assert np.array_equal(placed.index(placed.coords(ent)), ent)
+
+
+def test_placement_routes_through_all_grid_queries():
+    plan = plan_grid(27)
+    rng = np.random.default_rng(3)
+    perm = rng.permutation(27)
+    placed = plan.with_placement(perm)
+    ent = np.arange(27)
+    assert np.array_equal(placed.slot_of(ent), perm)
+    assert np.array_equal(placed.coords(ent), plan.coords(perm))
+    for rnd in range(plan.depth):
+        assert np.array_equal(placed.group_key(ent, rnd),
+                              plan.group_key(perm, rnd))
+
+
+def test_cluster_permutation_packs_largest_first():
+    labels = np.array([0, 0, 1, 1, 1])
+    # cluster 1 (size 3) takes slots 0..2; cluster 0 takes 3..4
+    assert cluster_permutation(labels).tolist() == [3, 4, 0, 1, 2]
+    # ties break on lowest member index; within-cluster order kept
+    labels = np.array([1, 0, 1, 0])
+    assert cluster_permutation(labels).tolist() == [0, 2, 1, 3]
+    # stability: same labels -> same permutation
+    assert np.array_equal(cluster_permutation(labels),
+                          cluster_permutation(labels))
+
+
+# ---------------------------------------------------------------------------
+# identity bit-exactness + byte conservation (the safety half)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [8, 27, 64, 125])
+@pytest.mark.parametrize("tech", sorted(TECHNIQUES))
+def test_identity_bit_exact_every_technique(tech, n):
+    """An explicitly identity-placed plan produces the byte-identical
+    message schedule of the raw plan for every technique."""
+    plan = plan_grid(n)
+    placed = plan.with_placement(np.arange(plan.capacity))
+    mask = np.ones(n, np.float32)
+    a = make_aggregator(tech, plan).message_plan(mask, MB)
+    b = make_aggregator(tech, placed).message_plan(mask, MB)
+    assert [(m.src, m.dst, m.nbytes) for r in a.rounds for m in r] \
+        == [(m.src, m.dst, m.nbytes) for r in b.rounds for m in r]
+
+
+@pytest.mark.parametrize("n", [8, 27, 64, 125])
+def test_any_permutation_preserves_bytes(n):
+    """Placement moves traffic across links, never changes totals:
+    measured bytes match ``topology.mar_bytes`` on the placed plan,
+    and (full participation) the unplaced oracle too."""
+    rng = np.random.default_rng(n)
+    plan = plan_grid(n)
+    for trial in range(3):
+        placed = plan.with_placement(rng.permutation(plan.capacity))
+        mask = np.ones(n, np.float32)
+        if trial == 2:                     # one churned trial
+            mask[rng.choice(n, size=n // 4, replace=False)] = 0.0
+        tr, _ = _run(placed, n, mask=mask, link_params=SHUF)
+        oracle = topology.mar_bytes(n, placed, MB, mask=mask)
+        assert tr.total_bytes == pytest.approx(oracle)
+        if mask.all():
+            assert oracle == pytest.approx(
+                topology.mar_bytes(n, plan, MB, mask=mask))
+
+
+def test_engines_agree_under_placement_and_wan_terms():
+    """Heap and vector transcripts stay equal for a placed plan on the
+    pairwise-WAN regions profile — bytes, times and link seconds."""
+    n = 64
+    plan = plan_grid(n).with_placement(
+        np.random.default_rng(9).permutation(64))
+    agg = make_aggregator("mar", plan)
+    mask = np.ones(n, np.float32)
+    mplan = agg.message_plan(mask, MB)
+    aplan = build_array_plan("mar", plan, mask, MB,
+                             num_rounds=agg.num_rounds)
+    th = NetworkSim(n, "regions", seed=2, link_params=SHUF).run(mplan)
+    tv = VectorNetworkSim(n, "regions", seed=2,
+                          link_params=SHUF).run(aplan)
+    _same_transcripts(th, tv)
+    assert th.link_time_stats                       # actually filled
+    assert all(v >= 0.0 for v in th.link_time_stats.values())
+
+
+# ---------------------------------------------------------------------------
+# link-seconds evidence (satellites 1-2)
+# ---------------------------------------------------------------------------
+
+def test_peer_attrs_ground_truth():
+    uni = build_link_model("uniform", 8)
+    attrs = uni.peer_attrs()
+    assert {"up", "down", "lat", "loss"} <= set(attrs)
+    assert all(np.asarray(v).shape == (8,) for v in attrs.values())
+    reg = build_link_model("regions", 16)
+    assert "region" in reg.peer_attrs()
+    # shuffle scatters region assignment but keeps the multiset
+    shuf = build_link_model("regions", 16, shuffle=True)
+    a = reg.peer_attrs()["region"]
+    b = shuf.peer_attrs()["region"]
+    assert not np.array_equal(a, b)
+    assert np.array_equal(np.sort(a), np.sort(b))
+
+
+def test_link_time_stats_exact_mode_values():
+    """Per-link seconds = transfer + both latencies (no queue wait);
+    loopbacks bill zero."""
+    from repro.core.transport import Message, MessagePlan
+    net = NetworkSim(4, "uniform", seed=0)
+    up = net.links.peer_attrs()["up"]
+    down = net.links.peer_attrs()["down"]
+    lat = net.links.peer_attrs()["lat"]
+    mplan = MessagePlan("probe", 4, 4,
+                        ((Message(0, 1, 1e6), Message(2, 2, 1e6)),))
+    tr = net.run(mplan)
+    want = 1e6 / min(up[0], down[1]) + lat[0] + lat[1]
+    assert tr.link_time_stats[(0, 1)] == pytest.approx(want)
+    assert tr.link_time_stats[(2, 2)] == 0.0
+
+
+def test_link_accounting_peer_mode_seconds():
+    n = LINK_DETAIL_MAX_PEERS + 4
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, n, 2000)
+    dst = rng.integers(0, n, 2000)
+    nb = rng.integers(1, 100, 2000).astype(float)
+    secs = rng.random(2000)
+    acct = LinkAccounting(n, n, top_k=8)
+    acct.add_batch(src, dst, nb, secs)
+    tr = Transcript(technique="mar")
+    acct.finalize(tr)
+    np.testing.assert_allclose(
+        tr.tx_seconds_by_peer,
+        np.bincount(src, weights=secs, minlength=n))
+    np.testing.assert_allclose(
+        tr.rx_seconds_by_peer,
+        np.bincount(dst, weights=secs, minlength=n))
+    # the seconds top-k rides the byte top-k's key set
+    assert set(tr.link_time_stats) == set(tr.bytes_by_link)
+
+
+def test_estimator_fallback_derives_from_bytes_and_finish():
+    """Without link_time_stats the estimator apportions each sender's
+    finish time over its outgoing links by byte share."""
+    est = LinkQualityEstimator(3)
+    tr = SimpleNamespace(
+        link_time_stats={},
+        bytes_by_link={(0, 1): 100.0, (0, 2): 300.0, (1, 1): 50.0},
+        peer_finish_s=np.array([4.0, 1.0, 0.0]))
+    est.update(tr)
+    cost = est.cost_to(np.array([1, 2]))
+    # sender 0: 4s over 400B -> 0.01 s/B on both outgoing links
+    assert cost[0, 0] == pytest.approx(0.01)
+    assert cost[0, 1] == pytest.approx(0.01)
+    assert np.isnan(cost[1, 0])        # loopback carries no evidence
+    assert est.n_links == 2
+
+
+def test_estimator_prefers_measured_seconds():
+    est = LinkQualityEstimator(2)
+    tr = SimpleNamespace(
+        link_time_stats={(0, 1): 2.0},
+        bytes_by_link={(0, 1): 100.0},
+        peer_finish_s=np.array([99.0, 0.0]))
+    est.update(tr)
+    assert est.cost_to(np.array([1]))[0, 0] == pytest.approx(0.02)
+
+
+# ---------------------------------------------------------------------------
+# the clustered policy (the payoff half)
+# ---------------------------------------------------------------------------
+
+def _probed_policy(n, seed=0, **kw):
+    net = NetworkSim(n, "regions", seed=seed, link_params=SHUF)
+    plan = plan_grid(n)
+    policy = ClusteredPlacement(plan, seed=seed, **kw)
+    calls = {"n": 0}
+
+    def prober(mplan):
+        calls["n"] += 1
+        assert mplan.technique == "placement_probe"
+        return net.run(mplan)
+
+    policy.bind_prober(prober)
+    return net, plan, policy, calls
+
+
+def test_clustered_recovers_ground_truth_regions():
+    net, plan, policy, calls = _probed_policy(64)
+    target = policy.observe(0, None, plan)
+    assert calls["n"] == 1                # sparse evidence -> probed
+    assert target is not None and target.placement is not None
+    truth = net.links.peer_attrs()["region"]
+    # perfect purity: every learned cluster sits in one region
+    for c in np.unique(policy.labels):
+        assert np.unique(truth[policy.labels == c]).size == 1
+    # and the permutation packs each region contiguously
+    slot_region = np.empty(64, np.int64)
+    slot_region[np.asarray(target.placement)[:64]] = truth
+    changes = int(np.sum(np.diff(slot_region) != 0))
+    assert changes == np.unique(truth).size - 1
+
+
+def test_clustered_beats_random_in_seconds():
+    """The acceptance inequality, small scale: on shuffled regions the
+    learned placement is strictly faster than a random one and than
+    raw indices (deterministic sim, so one iteration decides)."""
+    net, plan, policy, _ = _probed_policy(64)
+    target = policy.observe(0, None, plan)
+    big = 2_000_000                        # bandwidth-bound transfers
+    t_clustered, _ = _run(target, 64, link_params=SHUF, mb=big)
+    t_identity, _ = _run(plan, 64, link_params=SHUF, mb=big)
+    rand = plan.with_placement(
+        np.random.default_rng(17).permutation(64))
+    t_random, _ = _run(rand, 64, link_params=SHUF, mb=big)
+    assert t_clustered.iteration_s < 0.8 * t_random.iteration_s
+    assert t_clustered.iteration_s < 0.8 * t_identity.iteration_s
+    assert t_clustered.total_bytes == t_random.total_bytes \
+        == t_identity.total_bytes
+
+
+def test_clustered_is_stable_and_rate_limited():
+    net, plan, policy, calls = _probed_policy(27, interval=8)
+    target = policy.observe(0, None, plan)
+    assert target is not None and calls["n"] == 1
+    # same evidence, inside the interval: no new probe, no proposal
+    assert policy.observe(1, None, target) is None
+    assert calls["n"] == 1
+
+
+def test_rebind_reemits_without_reprobing():
+    """After an adaptive-M dims change the cached labels re-emit the
+    permutation for the new grid — no fresh probe round."""
+    net, plan, policy, calls = _probed_policy(64)
+    first = policy.observe(0, None, plan)
+    assert first is not None
+    new_dims = GridPlan(64, (4, 4, 4))
+    policy.rebind(new_dims)
+    again = policy.observe(1, None, new_dims)
+    assert calls["n"] == 1
+    assert again is not None and again.dims == (4, 4, 4)
+    assert again.placement is not None
+    # same labels -> same packing on the new grid
+    assert again.placement == tuple(
+        int(s) for s in cluster_permutation(policy.labels))
+
+
+def test_rebind_resets_on_membership_change():
+    net, plan, policy, calls = _probed_policy(64)
+    policy.observe(0, None, plan)
+    policy.rebind(plan_grid(27))
+    assert policy.labels is None
+    assert policy.estimator.n_peers == 27
+
+
+def test_probe_plan_shape():
+    lm = np.array([0, 5])
+    mplan = probe_plan(12, lm, probe_bytes=1000.0)
+    assert len(mplan.rounds) == 4          # broadcast+gather per lm
+    assert all(len(r) == 11 for r in mplan.rounds)
+    assert mplan.technique == "placement_probe"
+
+
+def test_registry_contents():
+    assert {"identity", "random", "clustered"} <= set(PLACEMENTS)
+    pol = build_placement("identity", plan_grid(8))
+    placed = plan_grid(8).with_placement(np.array([1, 0, 2, 3, 4,
+                                                   5, 6, 7]))
+    # identity clears a stray placement; random proposes exactly once
+    assert pol.observe(0, None, placed) == plan_grid(8)
+    rnd = build_placement("random", plan_grid(8), seed=3)
+    prop = rnd.observe(0, None, plan_grid(8))
+    assert prop is not None and prop.placement is not None
+    assert rnd.observe(1, None, prop) is None

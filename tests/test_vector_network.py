@@ -54,6 +54,11 @@ def _assert_equal_transcripts(th: Transcript, tv: Transcript):
     assert tv.kd_bytes == th.kd_bytes
     assert tv.round_s == th.round_s                 # exact, not approx
     assert np.array_equal(tv.peer_finish_s, th.peer_finish_s)
+    assert tv.link_time_stats == th.link_time_stats  # seconds, bitwise
+    assert np.array_equal(np.asarray(tv.tx_seconds_by_peer),
+                          np.asarray(th.tx_seconds_by_peer))
+    assert np.array_equal(np.asarray(tv.rx_seconds_by_peer),
+                          np.asarray(th.rx_seconds_by_peer))
     assert tv.iteration_s == th.iteration_s
     assert np.array_equal(tv.lost_senders, th.lost_senders)
     assert (sorted((m.src, m.dst, m.nbytes) for m in tv.dropped)
