@@ -45,6 +45,31 @@ def main(argv=None) -> int:
          us_ref=round(_time(
              lambda *a: ref.decode_attention_ref(*a), qd, k, v, lens)))
 
+    # serving-shape decode: dense cache vs paged pool (block table
+    # indirection cost on identical KV bytes; bench gate lives in
+    # benchmarks/serving.py)
+    bsrv, bs = 8, 16
+    nblk = s // bs
+    qp = jnp.asarray(rng.normal(size=(bsrv, h, d)), jnp.float32)
+    kd = jnp.asarray(rng.normal(size=(bsrv, s, kvh, d)), jnp.float32)
+    vd = jnp.asarray(rng.normal(size=(bsrv, s, kvh, d)), jnp.float32)
+    kp = kd.reshape(bsrv * nblk, bs, kvh, d)
+    kp = jnp.concatenate([jnp.zeros((1,) + kp.shape[1:], kp.dtype), kp])
+    vp = vd.reshape(bsrv * nblk, bs, kvh, d)
+    vp = jnp.concatenate([jnp.zeros((1,) + vp.shape[1:], vp.dtype), vp])
+    bt = jnp.arange(1, 1 + bsrv * nblk, dtype=jnp.int32).reshape(bsrv, nblk)
+    lens_p = jnp.full((bsrv,), s - 3, jnp.int32)     # ragged tail
+    emit("kernel", name="decode_attention_paged", shape=f"{bsrv}x{s}x{h}x{d}",
+         block_size=bs,
+         us_dense=round(_time(
+             lambda *a: ops.decode_attention(*a), qp, kd, vd, lens_p)),
+         us_paged=round(_time(
+             lambda *a: ops.paged_decode_attention(*a), qp, kp, vp, bt,
+             lens_p)),
+         us_ref=round(_time(
+             lambda *a: ref.paged_decode_attention_ref(*a), qp, kp, vp, bt,
+             lens_p)))
+
     nh, dk, dv = 2, 16, 32
     qs = jnp.asarray(rng.normal(size=(b, nh, s, dk)), jnp.float32)
     ks = jnp.asarray(rng.normal(size=(b, nh, s, dk)) * 0.3, jnp.float32)

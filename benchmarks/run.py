@@ -28,6 +28,7 @@ MODULES = [
     "placement",
     "transport_calibration",
     "kernel_bench",
+    "serving",
 ]
 
 

@@ -1,0 +1,179 @@
+"""Offered-load serving sweep: continuous batching vs sequential loop.
+
+The serving tier's acceptance benchmark (ISSUE 8): drain a mixed-length
+session set through the paged-KV continuous-batching
+:class:`~repro.serve.engine.DecodeServer` and through the sequential
+one-session-at-a-time baseline (the pre-engine ``launch/serve.py``
+loop), on identical prompts, weights and greedy decoding. Reports
+tokens/s plus p50/p99 per-token latency and p50 time-to-first-token per
+arm. Both arms are warmed first so jit compilation never lands in a
+timed region.
+
+A hot-swap cell re-runs the top offered-load point with an identity
+``swap_params`` mid-drain and checks zero dropped sessions and an
+unchanged total token count.
+
+Gate: continuous batching must reach >= 2x the sequential tokens/s at
+the highest offered load (the batch-parallel decode steps amortize the
+per-step dispatch + weight-read cost that the sequential loop pays per
+token). Emits CSV rows plus ``BENCH_serving.json``; exits nonzero on a
+sub-gate sweep or a hot-swap drop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, std_argparser
+from repro.configs.registry import get_config, get_smoke_config
+from repro.models.model import Model
+from repro.serve import DecodeServer, ServeConfig, run_sequential
+
+GATE_SPEEDUP = 2.0
+ARCH = "starcoder2-3b"
+
+
+def _lat(sessions):
+    times = [t for s in sessions for t in s.token_times[1:]]
+    ttft = [s.token_times[0] for s in sessions]
+    return {
+        "p50_ms": round(float(np.percentile(times, 50)) * 1e3, 3),
+        "p99_ms": round(float(np.percentile(times, 99)) * 1e3, 3),
+        "p50_ttft_ms": round(float(np.percentile(ttft, 50)) * 1e3, 3),
+    }
+
+
+def _mk_prompts(rng, n, pad_len, vocab):
+    plens = rng.integers(max(1, pad_len // 4), pad_len + 1, n)
+    return [rng.integers(0, vocab, p).tolist() for p in plens]
+
+
+def run_cell(model, params, prompts, scfg: ServeConfig, swap_mid: bool
+             ) -> dict:
+    """One offered-load point: sequential arm then engine arm on the
+    same prompts. The engine instance is pre-warmed on two throwaway
+    sessions (drained to quiescence) before the timed drain."""
+    gen, pad = scfg.max_new, scfg.pad_len
+    # -- sequential baseline (warm one session, then time) -------------
+    run_sequential(model, params, [prompts[0]], max_new=gen, pad_len=pad)
+    t0 = time.perf_counter()
+    seq_done = run_sequential(model, params, prompts, max_new=gen,
+                              pad_len=pad)
+    seq_s = time.perf_counter() - t0
+    seq_toks = sum(len(s.generated) for s in seq_done)
+
+    # -- continuous batching -------------------------------------------
+    srv = DecodeServer(model, params, scfg)
+    for p in prompts[:2]:
+        srv.enqueue(p)
+    srv.run()
+    srv.assert_quiescent()
+    srv.finished.clear()                        # warmup excluded
+    for p in prompts:
+        srv.enqueue(p)
+    t0 = time.perf_counter()
+    if swap_mid:
+        for _ in range(3):
+            srv.step()
+        srv.swap_params(srv.params, tag="bench-identity")
+    srv.run()
+    cont_s = time.perf_counter() - t0
+    srv.assert_quiescent()
+    cont_toks = sum(len(s.generated) for s in srv.finished)
+
+    seq_rate = seq_toks / max(seq_s, 1e-9)
+    cont_rate = cont_toks / max(cont_s, 1e-9)
+    return {
+        "sessions": len(prompts),
+        "max_batch": scfg.max_batch,
+        "block_size": scfg.block_size,
+        "num_blocks": scfg.num_blocks,
+        "pad_len": pad, "gen": gen,
+        "seq_tok_s": round(seq_rate, 2),
+        "cont_tok_s": round(cont_rate, 2),
+        "speedup": round(cont_rate / max(seq_rate, 1e-9), 3),
+        "seq": _lat(seq_done), "cont": _lat(srv.finished),
+        "decode_steps": srv.stats()["decode_steps"],
+        "swapped": swap_mid,
+        "dropped": len(prompts) - len(srv.finished),
+        "tokens_match_seq": sorted(
+            (s.sid, tuple(s.generated)) for s in seq_done) == sorted(
+            (s.sid, tuple(s.generated)) for s in srv.finished),
+    }
+
+
+def main(argv=None) -> int:
+    ap = std_argparser(__doc__)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+
+    if args.full:
+        loads, max_batch, pad_len, gen, bs = (8, 16, 32), 16, 48, 32, 16
+    elif args.smoke:
+        loads, max_batch, pad_len, gen, bs = (4, 12), 8, 16, 12, 8
+    else:
+        loads, max_batch, pad_len, gen, bs = (4, 8, 16), 8, 24, 16, 8
+
+    cfg = get_smoke_config(ARCH) if not args.full else get_config(ARCH)
+    # f32 on CPU: keeps the greedy token streams of both arms comparable
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    need = -(-(pad_len + gen) // bs)
+    scfg = ServeConfig(max_batch=max_batch, block_size=bs,
+                       num_blocks=1 + need * max_batch, pad_len=pad_len,
+                       max_new=gen)
+
+    rc, cells = 0, []
+    for i, n in enumerate(loads):
+        prompts = _mk_prompts(rng, n, pad_len, cfg.vocab_size)
+        cell = run_cell(model, params, prompts, scfg,
+                        swap_mid=(i == len(loads) - 1))
+        cells.append(cell)
+        emit("serving", sessions=n, seq_tok_s=cell["seq_tok_s"],
+             cont_tok_s=cell["cont_tok_s"], speedup=cell["speedup"],
+             cont_p50_ms=cell["cont"]["p50_ms"],
+             cont_p99_ms=cell["cont"]["p99_ms"],
+             seq_p50_ms=cell["seq"]["p50_ms"],
+             seq_p99_ms=cell["seq"]["p99_ms"],
+             dropped=cell["dropped"],
+             tokens_match=cell["tokens_match_seq"])
+        if cell["dropped"]:
+            print(f"# FAIL {cell['dropped']} sessions dropped "
+                  f"(swap={cell['swapped']}) at load {n}", flush=True)
+            rc = 1
+        if not cell["tokens_match_seq"]:
+            print(f"# FAIL greedy token mismatch engine vs sequential "
+                  f"at load {n}", flush=True)
+            rc = 1
+
+    top = cells[-1]
+    if top["speedup"] < GATE_SPEEDUP:
+        print(f"# FAIL continuous batching below the {GATE_SPEEDUP}x "
+              f"tokens/s gate at load {top['sessions']} "
+              f"(got {top['speedup']}x)", flush=True)
+        rc = 1
+    summary = {
+        "top_load_speedup": top["speedup"],
+        "gate": GATE_SPEEDUP,
+        "hotswap_zero_drop": top["swapped"] and top["dropped"] == 0,
+        "max_cont_tok_s": max(c["cont_tok_s"] for c in cells),
+    }
+    emit("serving_summary", **summary)
+    with open(args.out, "w") as f:
+        json.dump({"benchmark": "serving", "arch": ARCH,
+                   "smoke": bool(args.smoke), "seed": args.seed,
+                   "summary": summary, "cells": cells}, f, indent=2)
+    print(f"# wrote {args.out}", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -144,6 +144,16 @@ class Checkpointer:
         s = self.steps()
         return s[-1] if s else None
 
+    def poll(self, since: Optional[int] = None) -> Optional[int]:
+        """Newest step strictly newer than ``since`` (None if nothing new).
+
+        The serving tier's hot-swap watcher: call between decode steps
+        with the step of the weights currently loaded."""
+        latest = self.latest_step()
+        if latest is None or (since is not None and latest <= since):
+            return None
+        return latest
+
     def restore(self, step: Optional[int] = None,
                 like: Optional[PyTree] = None
                 ) -> Tuple[PyTree, Dict[str, Any]]:

@@ -210,15 +210,41 @@ def make_serve_step(model: Model) -> Callable:
     return serve_step
 
 
-def make_prefill_step(model: Model) -> Callable:
+def make_prefill_step(model: Model, max_len: Optional[int] = None
+                      ) -> Callable:
     """Prefill: forward over the full prompt, emit last-token logits and
-    the populated cache (single pass; see transformer.forward)."""
+    the populated cache (single pass; see transformer.forward).
+
+    With ``max_len`` the cache is returned *decode-ready* — converted to
+    the exact ``init_cache(cfg, b, max_len)`` layout via
+    ``prefill_cache_to_decode`` — so ``serve_step`` continues from
+    position ``s`` directly, with no token-by-token prompt replay."""
 
     def prefill_step(params, batch):
+        tokens = batch["tokens"]
         logits, _, cache = model.forward(
-            params, batch["tokens"],
+            params, tokens,
             prefix_embeds=batch.get("prefix_embeds"),
             collect_cache=True)
+        if max_len is not None:
+            cache = model.prefill_cache_to_decode(
+                cache, max_len, tokens.shape[1])
         return logits[:, -1], cache
 
     return prefill_step
+
+
+def make_paged_serve_step(model: Model) -> Callable:
+    """One greedy decode step over the paged serving pool.
+
+    ``paged_serve_step(params, pages, block_tables, pos, token) ->
+    (next_token, logits, pages)`` — logits are exposed so the engine can
+    apply per-session sampling/stops host-side."""
+
+    def paged_serve_step(params, pages, block_tables, pos, token):
+        logits, pages = model.paged_decode_step(params, pages, block_tables,
+                                                pos, token)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, pages
+
+    return paged_serve_step

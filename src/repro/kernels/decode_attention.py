@@ -72,15 +72,23 @@ def decode_attention_fwd(q: jax.Array, k_cache: jax.Array,
     b, h, d = q.shape
     s, kvh = k_cache.shape[1], k_cache.shape[2]
     g = h // kvh
+    # Keep the full block size and pad the cache view up to a block
+    # multiple instead of shrinking bk to a divisor of s (the old
+    # ``while s % bk: bk //= 2`` silently degraded to bk=1-ish tiles for
+    # non-power-of-two caches). Padded positions sit at pos >= s >=
+    # length, so the existing length mask (and the k_start < length
+    # block skip) already excludes them.
     bk = min(block_k, s)
-    while s % bk:
-        bk //= 2
-    nk = s // bk
+    nk = -(-s // bk)
+    s_pad = nk * bk
     scale = 1.0 / np.sqrt(d)
 
     qr = q.reshape(b, kvh, g, d).reshape(b * kvh, g, d)
     kr = k_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
     vr = v_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s), (0, 0))
+        kr, vr = jnp.pad(kr, pad), jnp.pad(vr, pad)
     lens = jnp.repeat(lengths.astype(jnp.int32), kvh)      # [b*kvh]
 
     kernel = functools.partial(_decode_kernel, bk=bk, scale=scale, nk=nk)

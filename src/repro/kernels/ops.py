@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from repro.kernels.decode_attention import decode_attention_fwd
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.group_mean import group_mean_fwd
+from repro.kernels.paged_attention import (gather_dense_decode,
+                                           paged_decode_attention_fwd)
 from repro.kernels.ssd_scan import ssd_scan_fwd
 
 Array = jax.Array
@@ -52,6 +54,29 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
     _check(q.shape[2] == k_cache.shape[3], "head_dim mismatch")
     return decode_attention_fwd(q, k_cache, v_cache, lengths,
                                 interpret=_interpret())
+
+
+@jax.jit
+def paged_decode_attention(q: Array, k_pages: Array, v_pages: Array,
+                           block_tables: Array, lengths: Array) -> Array:
+    """q [b,h,d]; pages [nb,bs,kvh,d]; block_tables [b,nblk]; lengths [b]
+    -> [b,h,d].
+
+    TPU: split-K kernel gathering pages via the scalar-prefetched block
+    table. CPU/interpret: gather+dense fallback (running the kernel
+    through the Python interpreter per page would be the slow path;
+    the gathered einsum is semantics-exact).
+    """
+    _check(q.ndim == 3 and k_pages.ndim == 4, "bad ranks")
+    _check(q.shape[2] == k_pages.shape[3], "head_dim mismatch")
+    _check(k_pages.shape == v_pages.shape, "k/v pages mismatch")
+    _check(block_tables.ndim == 2 and block_tables.shape[0] == q.shape[0],
+           "block_tables must be [b, nblk]")
+    if _interpret():
+        return gather_dense_decode(q, k_pages, v_pages, block_tables,
+                                   lengths)
+    return paged_decode_attention_fwd(q, k_pages, v_pages, block_tables,
+                                      lengths, interpret=False)
 
 
 @jax.jit

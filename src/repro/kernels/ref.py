@@ -50,6 +50,22 @@ def decode_attention_ref(q: Array, k_cache: Array, v_cache: Array,
     return o.reshape(b, h, d).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q: Array, k_pages: Array, v_pages: Array,
+                               block_tables: Array, lengths: Array) -> Array:
+    """q [b,h,d]; pages [nb,bs,kvh,d]; block_tables [b,nblk]; lengths [b].
+
+    Gathers each session's pages into a dense [b, nblk*bs, kvh, d] cache
+    (block-table order == position order) and defers to the dense decode
+    oracle — the semantic ground truth for the paged kernel.
+    """
+    b = q.shape[0]
+    bs, kvh, d = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
+    s = block_tables.shape[1] * bs
+    k = k_pages[block_tables].reshape(b, s, kvh, d)
+    v = v_pages[block_tables].reshape(b, s, kvh, d)
+    return decode_attention_ref(q, k, v, lengths)
+
+
 def ssd_scan_ref(q: Array, k: Array, v: Array, log_a: Array,
                  h0: Array) -> Tuple[Array, Array]:
     """Gated linear recurrence (Mamba2 SSD / mLSTM shared primitive).

@@ -1,12 +1,17 @@
-"""Batched decode serving driver (prefill -> decode with KV/state cache).
+"""Decode-serving driver over the continuous-batching engine.
 
-Serves a (smoke or full) architecture: prefill the prompt batch in one
-forward pass, then greedy-decode tokens step by step. On CPU this runs
-reduced configs end-to-end; the production shapes are exercised by the
-dry-run (decode_32k / long_500k cells).
+Thin CLI around :mod:`repro.serve`: enqueue N synthetic sessions
+(mixed prompt lengths with ``--vary-prompts``), drain them through the
+paged-KV :class:`~repro.serve.engine.DecodeServer`, print throughput
+and latency percentiles. ``--sequential`` runs the one-session-at-a-time
+baseline instead (also the only path for recurrent families, whose
+state cannot be paged). ``--ckpt-dir`` serves weights from a training
+checkpoint directory and hot-swaps newer checkpoints mid-run;
+``--swap-demo`` performs an identity hot-swap mid-drain to demonstrate
+zero-drop swapping.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch zamba2-2.7b --smoke \
-      --batch 4 --prompt-len 64 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --smoke --sessions 8 \
+      --prompt-len 24 --gen 16 --max-batch 4
 """
 from __future__ import annotations
 
@@ -14,21 +19,46 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
-from repro.core.fl_device import make_prefill_step, make_serve_step
 from repro.models.model import Model
+from repro.serve import (DecodeServer, ServeConfig, run_sequential,
+                         serving_params_from_checkpoint)
+
+PAGED = ("dense", "vlm", "audio", "moe")
+
+
+def _summarize(tag, sessions, elapsed):
+    toks = sum(len(s.generated) for s in sessions)
+    times = [t for s in sessions for t in s.token_times[1:]]
+    p50 = np.percentile(times, 50) * 1e3 if times else 0.0
+    p99 = np.percentile(times, 99) * 1e3 if times else 0.0
+    print(f"[serve] {tag}: {len(sessions)} sessions, {toks} tokens in "
+          f"{elapsed:.2f}s ({toks / max(elapsed, 1e-9):.1f} tok/s), "
+          f"per-token p50 {p50:.1f}ms p99 {p99:.1f}ms")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--arch", default="starcoder2-3b", choices=ARCH_IDS)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--sessions", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--vary-prompts", action="store_true",
+                    help="mixed prompt lengths in [1, prompt_len]")
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size (default: a full batch's worst case)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="one-session-at-a-time dense baseline")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="serve (and hot-swap) weights from this "
+                         "checkpoint directory")
+    ap.add_argument("--swap-demo", action="store_true",
+                    help="identity hot-swap mid-drain (zero-drop demo)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -36,46 +66,63 @@ def main(argv=None) -> int:
     model = Model(cfg)
     rng = np.random.default_rng(args.seed)
     params = model.init(jax.random.PRNGKey(args.seed))
-    max_len = args.prompt_len + args.gen
 
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size,
-                     size=(args.batch, args.prompt_len)), jnp.int32)
-    batch = {"tokens": prompts}
-    if cfg.frontend != "none":
-        from repro.models.transformer import PREFIX_LEN
-        p = PREFIX_LEN[cfg.frontend]
-        batch["prefix_embeds"] = jnp.asarray(
-            rng.normal(size=(args.batch, p, cfg.d_model)), jnp.float32)
+    ckpt = None
+    if args.ckpt_dir:
+        from repro.checkpoint.checkpointer import Checkpointer
+        ckpt = Checkpointer(args.ckpt_dir)
+        if ckpt.latest_step() is not None:
+            state, meta = ckpt.restore()
+            params = serving_params_from_checkpoint(state, params)
+            print(f"[serve] restored step {ckpt.latest_step()} "
+                  f"from {args.ckpt_dir} (meta: {meta})")
 
-    # Prefill: logits for the last prompt position (cache is rebuilt in
-    # decode form below — the production handoff pads prefill KV into the
-    # ring/linear cache; on smoke scale we simply replay the prompt).
-    prefill = jax.jit(make_prefill_step(model))
-    t0 = time.time()
-    last_logits, _ = prefill(params, batch)
-    print(f"[serve] prefill {args.batch}x{args.prompt_len} "
-          f"in {time.time()-t0:.2f}s")
+    paged = cfg.family in PAGED and cfg.frontend == "none" \
+        and not args.sequential
+    if not paged and (args.vary_prompts and cfg.family not in PAGED):
+        print("[serve] recurrent family: fixed-length prompts only")
+        args.vary_prompts = False
+    plens = (rng.integers(1, args.prompt_len + 1, args.sessions)
+             if args.vary_prompts
+             else np.full(args.sessions, args.prompt_len))
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in plens]
 
-    serve = jax.jit(make_serve_step(model))
-    cache = model.init_cache(args.batch, max_len)
-    # replay prompt tokens through decode steps to fill the cache
-    tok = prompts[:, 0]
-    for i in range(args.prompt_len):
-        nxt, cache = serve(params, cache, prompts[:, i])
-    generated = [nxt]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        nxt, cache = serve(params, cache, generated[-1])
-        generated.append(nxt)
-    dt = time.time() - t0
-    out = jnp.stack(generated, axis=1)
-    print(f"[serve] generated {args.gen} tokens/seq x{args.batch} in "
-          f"{dt:.2f}s ({args.gen*args.batch/max(dt,1e-9):.1f} tok/s)")
-    print("[serve] sample:", np.asarray(out[0])[:16].tolist())
-    agree = float(jnp.mean((jnp.argmax(last_logits, -1) == generated[0])
-                           .astype(jnp.float32)))
-    print(f"[serve] prefill/decode first-token agreement: {agree:.2f}")
+    if not paged:
+        print(f"[serve] sequential baseline ({cfg.family})")
+        t0 = time.perf_counter()
+        done = run_sequential(model, params, prompts, max_new=args.gen,
+                              pad_len=args.prompt_len)
+        _summarize("sequential", done, time.perf_counter() - t0)
+        print("[serve] sample:", done[0].generated[:16])
+        return 0
+
+    need = -(-(args.prompt_len + args.gen) // args.block_size)
+    num_blocks = args.num_blocks or 1 + need * args.max_batch
+    scfg = ServeConfig(max_batch=args.max_batch, block_size=args.block_size,
+                       num_blocks=num_blocks, pad_len=args.prompt_len,
+                       max_new=args.gen)
+    srv = DecodeServer(model, params, scfg)
+    if ckpt is not None:
+        srv.attach_checkpointer(ckpt, params)
+    for p in prompts:
+        srv.enqueue(p)
+    print(f"[serve] engine: {args.sessions} sessions, pool "
+          f"{num_blocks}x{args.block_size} KV slots, batch {args.max_batch}")
+    t0 = time.perf_counter()
+    if args.swap_demo:
+        for _ in range(3):
+            srv.step()
+        srv.swap_params(srv.params, tag="demo-identity")
+    srv.run()
+    elapsed = time.perf_counter() - t0
+    srv.assert_quiescent()
+    _summarize("continuous", srv.finished, elapsed)
+    st = srv.stats()
+    print(f"[serve] {st['prefills']} prefills, {st['decode_steps']} decode "
+          f"steps, {st['swaps']} hot-swaps")
+    if srv.swap_log:
+        print("[serve] swap log:", srv.swap_log)
+    print("[serve] sample:", srv.finished[0].generated[:16])
     return 0
 
 

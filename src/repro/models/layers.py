@@ -188,6 +188,44 @@ def attention_decode(params, x: Array, cfg: ModelConfig, k_cache: Array,
     return out.reshape(b, 1, -1) @ params["wo"], k_cache, v_cache
 
 
+def attention_decode_paged(params, x: Array, cfg: ModelConfig,
+                           k_pages: Array, v_pages: Array,
+                           block_tables: Array, pos: Array
+                           ) -> Tuple[Array, Array, Array]:
+    """Single-token decode against a paged KV pool (serving tier).
+
+    x:[b,1,d]; pages [num_blocks, bs, kvh, hd] (this layer's slice of the
+    pool); block_tables [b, nblk] maps each session's logical block k to
+    a physical page; pos [b] = tokens already cached. The new K/V row is
+    scattered into page ``block_tables[i, pos // bs]`` slot ``pos % bs``;
+    attention runs through ``kernels.ops.paged_decode_attention`` (TPU
+    split-K kernel / CPU gather+dense). Inactive batch rows should point
+    their whole table at the scratch page 0 with pos 0.
+
+    Returns (out [b,1,d], k_pages, v_pages).
+    """
+    b = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    bs = k_pages.shape[1]
+    q = (x @ params["wq"]).reshape(b, 1, h, hd)
+    k = (x @ params["wk"]).reshape(b, 1, kvh, hd)
+    v = (x @ params["wv"]).reshape(b, 1, kvh, hd)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    blk = jnp.take_along_axis(block_tables, (pos // bs)[:, None], axis=1)[:, 0]
+    slot = pos % bs
+    # duplicate (blk, slot) targets only occur on the scratch page 0
+    # (inactive rows) — the undefined winner there is never read.
+    k_pages = k_pages.at[blk, slot].set(k[:, 0])
+    v_pages = v_pages.at[blk, slot].set(v[:, 0])
+
+    from repro.kernels import ops as kops
+    out = kops.paged_decode_attention(q[:, 0], k_pages, v_pages,
+                                      block_tables, pos + 1)
+    return out.reshape(b, 1, -1) @ params["wo"], k_pages, v_pages
+
+
 # ---------------------------------------------------------------------------
 # SwiGLU MLP
 # ---------------------------------------------------------------------------

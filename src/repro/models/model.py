@@ -53,6 +53,21 @@ class Model:
                     ) -> Tuple[Array, PyTree]:
         return T.decode_step(params, cache, token, self.cfg)
 
+    def prefill_cache_to_decode(self, cache: PyTree, max_len: int,
+                                seq_len: int,
+                                lengths: Optional[Array] = None) -> PyTree:
+        return T.prefill_cache_to_decode(cache, self.cfg, max_len, seq_len,
+                                         lengths)
+
+    def init_paged_cache(self, num_blocks: int, block_size: int) -> PyTree:
+        return T.init_paged_cache(self.cfg, num_blocks, block_size)
+
+    def paged_decode_step(self, params: PyTree, pages: PyTree,
+                          block_tables: Array, pos: Array, token: Array
+                          ) -> Tuple[Array, PyTree]:
+        return T.paged_decode_step(params, pages, block_tables, pos, token,
+                                   self.cfg)
+
     @property
     def has_frontend(self) -> bool:
         return self.cfg.frontend != "none"

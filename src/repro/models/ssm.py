@@ -151,12 +151,20 @@ def mamba_split(params, x: Array, cfg: ModelConfig):
 
 def mamba_block(params, x: Array, cfg: ModelConfig,
                 h0: Array = None) -> Array:
-    """x: [b, S, d] -> [b, S, d] (training / prefill, chunked SSD)."""
+    """x: [b, S, d] -> (y [b, S, d], h_final, conv_state).
+
+    ``conv_state`` [b, width-1, inner+2n] is the raw conv-input tail
+    (zero-padded when S < width-1) — exactly the streaming buffer
+    ``causal_conv`` expects, so prefill hands off to
+    ``mamba_decode_step`` without replaying the prompt.
+    """
     b, s, d = x.shape
     n = cfg.ssm_state
     inner, headdim, nheads = mamba_dims(cfg)
     z, xs, bc, dt_raw = mamba_split(params, x, cfg)
     conv_in = jnp.concatenate([xs, bc], axis=-1)
+    cw = cfg.ssm_conv_width
+    conv_state = jnp.pad(conv_in, ((0, 0), (cw - 1, 0), (0, 0)))[:, -(cw - 1):]
     conv_out = causal_conv(conv_in, params["conv_w"])
     xs, bmat, cmat = jnp.split(conv_out, [inner, inner + n], axis=-1)
 
@@ -180,7 +188,7 @@ def mamba_block(params, x: Array, cfg: ModelConfig,
     y = y + xh * params["d_skip"][None, :, None, None].astype(xh.dtype)
     y = y.transpose(0, 2, 1, 3).reshape(b, s, inner)
     y = y * jax.nn.silu(z)
-    return y @ params["out_proj"], h_final
+    return y @ params["out_proj"], h_final, conv_state
 
 
 def mamba_decode_step(params, x: Array, cfg: ModelConfig, conv_state: Array,

@@ -193,19 +193,21 @@ def forward(params: PyTree, tokens: Array, cfg: ModelConfig,
 
         def group(h, gp):
             def mblock(h, lp):
-                y, hf = S.mamba_block(
+                y, hf, ctail = S.mamba_block(
                     lp["cell"], L.rmsnorm(h, lp["norm"], cfg.norm_eps), cfg)
-                return h + y, hf
-            h, sstates = jax.lax.scan(_maybe_remat(mblock, cfg), h, gp)
+                return h + y, (hf, ctail)
+            h, (sstates, convs) = jax.lax.scan(_maybe_remat(mblock, cfg), h,
+                                               gp)
             h, _, kv = _attn_mlp_block(shared, h, cfg, positions, False,
                                        want_kv=collect_cache)
             if collect_cache:
                 # keep only the last `w` positions (sliding-window cache)
                 kv = (kv[0][:, -w:], kv[1][:, -w:])
-            return h, (sstates, kv)
-        h, (sstates, kvs) = jax.lax.scan(group, h, params["blocks"])
+            return h, (sstates, convs, kv)
+        h, (sstates, convs, kvs) = jax.lax.scan(group, h, params["blocks"])
         if collect_cache:
-            cache = {"ssm": sstates, "attn_k": kvs[0], "attn_v": kvs[1],
+            cache = {"ssm": sstates, "conv": convs,
+                     "attn_k": kvs[0], "attn_v": kvs[1],
                      "pos": jnp.full((b,), s, jnp.int32)}
 
     h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
@@ -349,3 +351,119 @@ def decode_step(params: PyTree, cache: PyTree, token: Array,
     h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
     logits = L.unembed(params["embedding"], h, cfg)[:, 0]
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill -> decode cache handoff
+# ---------------------------------------------------------------------------
+
+def prefill_cache_to_decode(cache: PyTree, cfg: ModelConfig, max_len: int,
+                            seq_len: int,
+                            lengths: Optional[Array] = None) -> PyTree:
+    """Convert a ``forward(collect_cache=True)`` cache into the decode
+    layout of ``init_cache(cfg, b, max_len)`` — no prompt replay.
+
+    * dense/vlm/audio/moe: pad the KV seq axis out to ``max_len``.
+    * ssm: states are O(1) and already decode-shaped — pass through.
+    * hybrid: conv/ssm states pass through; the sliding-window KV kept by
+      forward (last ``w_f = min(window, s)`` positions, in position
+      order) is padded to the decode window ``w_d = min(window,
+      max_len)`` and rotated so index ``j`` lands at ring slot
+      ``pos % w_d`` expected by ``attention_decode(window=w_d)``.
+
+    ``lengths`` [b] overrides ``pos`` for batches prefilled on
+    right-padded prompts (decode then overwrites the first pad slot and
+    masks the rest). Only meaningful for KV-cache families — recurrent
+    states absorb pad tokens, so ssm/hybrid must prefill at exact
+    length.
+
+    Hybrid continuation is bit-exact vs token-by-token replay only while
+    ``seq_len <= window``: forward runs the shared block full-causal,
+    decode windows it (a pre-existing semantic gap — see
+    tests/test_serve.py). The handoff itself is exact either way: the
+    converted cache reproduces forward's states and KV placement.
+    """
+    pos = cache["pos"] if lengths is None else lengths.astype(jnp.int32)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        s = cache["k"].shape[2]
+        assert s <= max_len, (s, max_len)
+        pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+        return {"k": jnp.pad(cache["k"], pad), "v": jnp.pad(cache["v"], pad),
+                "pos": pos}
+
+    if cfg.family == "ssm":
+        return {"mlstm": cache["mlstm"], "slstm": cache["slstm"],
+                "pos": pos}
+
+    if cfg.family == "hybrid":
+        k, v = cache["attn_k"], cache["attn_v"]     # [g, b, w_f, kvh, hd]
+        w_f = k.shape[2]
+        s = seq_len                   # static prompt length (jit-safe)
+        w_d = min(cfg.shared_attn_window, max_len)
+        assert w_f <= w_d, (w_f, w_d)
+        if w_f < w_d:
+            pad = ((0, 0), (0, 0), (0, w_d - w_f), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        # index j holds position s - w_f + j -> ring slot (s - w_f + j) % w_d
+        shift = (s - w_f) % w_d
+        if shift:
+            k = jnp.roll(k, shift, axis=2)
+            v = jnp.roll(v, shift, axis=2)
+        return {"conv": cache["conv"], "ssm": cache["ssm"],
+                "attn_k": k, "attn_v": v, "pos": pos}
+
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (serving tier)
+# ---------------------------------------------------------------------------
+
+PAGED_FAMILIES = ("dense", "vlm", "audio", "moe")
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int,
+                     block_size: int) -> PyTree:
+    """Zeroed paged KV pool shared by all sessions: ``[L, num_blocks,
+    block_size, kvh, hd]`` per tensor. Block 0 is the engine's scratch
+    page (inactive batch rows write there). KV-cache families only —
+    ssm/hybrid state is O(1)/O(window) and needs no paging."""
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(
+            f"paged KV serving needs a KV-cache family, got {cfg.family}")
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads,
+             cfg.head_dim)
+    return {"k_pages": jnp.zeros(shape, dt), "v_pages": jnp.zeros(shape, dt)}
+
+
+def paged_decode_step(params: PyTree, pages: PyTree, block_tables: Array,
+                      pos: Array, token: Array, cfg: ModelConfig
+                      ) -> Tuple[Array, PyTree]:
+    """One decode step over the paged pool. token [b] int32; block_tables
+    [b, nblk]; pos [b] = tokens already in cache (the new token writes at
+    slot ``pos`` of its session's pages). Returns (logits [b, V], pages).
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(cfg.family)
+    h = L.embed(params["embedding"], token[:, None])      # [b, 1, d]
+
+    def block(h, xs):
+        bp, kp, vp = xs
+        hn = L.rmsnorm(h, bp["norm1"], cfg.norm_eps)
+        att, kp, vp = L.attention_decode_paged(bp["attn"], hn, cfg, kp, vp,
+                                               block_tables, pos)
+        h = h + att
+        hn = L.rmsnorm(h, bp["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h = h + M.moe_block(bp["moe"], hn, cfg)
+        else:
+            h = h + L.mlp_block(bp["mlp"], hn)
+        return h, (kp, vp)
+
+    h, (kps, vps) = jax.lax.scan(
+        block, h, (params["blocks"], pages["k_pages"], pages["v_pages"]))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embedding"], h, cfg)[:, 0]
+    return logits, {"k_pages": kps, "v_pages": vps}

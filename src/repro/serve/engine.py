@@ -1,0 +1,419 @@
+"""Continuous-batching decode service over the paged KV pool.
+
+The serving story for an FL deployment (ROADMAP "heavy-traffic
+serving"): one model replica decodes many interactive sessions at once,
+while training keeps publishing fresh checkpoints that must go live
+*without dropping in-flight sessions*.
+
+Three pieces:
+
+* :class:`DecodeServer` — the continuous-batching engine. Admission is
+  FIFO with head-of-line blocking (a session is admitted the moment a
+  batch row AND its full worst-case block budget are both available —
+  conservative reservation means a running session can never hit pool
+  exhaustion mid-flight). Prefill runs the whole prompt in one forward
+  pass and scatters KV straight into the session's pages
+  (``write_prefill_to_pages``) — no token-by-token prompt replay; the
+  prompt is right-padded to a fixed ``pad_len`` so admission reuses a
+  single jit trace. Decode assembles every running session — whatever
+  their lengths — into one fixed-width batched step against the shared
+  pool; finished sessions are evicted between steps and their blocks
+  reclaimed, so a long generation never convoys short ones.
+* Sequential baseline (:func:`run_sequential`) — the pre-engine serve
+  loop (one session at a time, dense cache), kept as the benchmark
+  yardstick for ``benchmarks/serving.py``.
+* Checkpoint hot-swap — params enter the jitted step as a plain
+  argument, so swapping weights between steps is free (no retrace, no
+  cache rebuild: RoPE/KV are weight-independent). ``swap_params``
+  records the engine step and in-flight sessions;
+  ``attach_checkpointer`` polls a training run's checkpoint directory
+  and swaps automatically. ``serving_params_from_checkpoint`` folds a
+  peer-stacked FL checkpoint into serving weights (the peer mean —
+  post-aggregation peers agree, so the mean is a no-op then, and the
+  consensus estimate mid-round).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serve.paged_cache import (SCRATCH_BLOCK, BlockAllocator,
+                                     session_table, write_prefill_to_pages)
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Config / session bookkeeping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Static engine geometry (one jit trace per config)."""
+    max_batch: int = 8          # decode rows assembled per step
+    block_size: int = 16        # KV positions per page
+    num_blocks: int = 257       # pool size incl. the scratch page 0
+    pad_len: int = 64           # prompts are right-padded to this length
+    max_new: int = 32           # per-session generation cap (upper bound)
+    eos_id: Optional[int] = None
+
+    @property
+    def table_width(self) -> int:
+        """Block-table columns: worst-case session footprint, plus the
+        prefill's padded overhang (pad KV beyond a session's own blocks
+        lands on the scratch page)."""
+        need = -(-(self.pad_len + self.max_new) // self.block_size)
+        pref = -(-self.pad_len // self.block_size)
+        return max(need, pref)
+
+
+@dataclasses.dataclass
+class Session:
+    sid: int
+    prompt: np.ndarray                       # [plen] int32
+    max_new: int
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    row: int = -1
+    generated: List[int] = dataclasses.field(default_factory=list)
+    state: str = "queued"                    # queued -> running -> done
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    t_enqueue: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def plen(self) -> int:
+        return int(self.prompt.shape[0])
+
+    def blocks_needed(self, block_size: int) -> int:
+        return -(-(self.plen + self.max_new) // block_size)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint -> serving weights
+# ---------------------------------------------------------------------------
+
+def serving_params_from_checkpoint(state: PyTree, template: PyTree) -> PyTree:
+    """Fold a restored checkpoint into serving params shaped/dtyped like
+    ``template`` (``model.init(...)`` / ``model.init_shape()``).
+
+    Accepts either raw params or a full FL state dict (``{"params":
+    ..., "momentum": ...}``); leaves carrying a peer axis (ndim ==
+    template ndim + 1) are averaged over it.
+    """
+    from repro.checkpoint.checkpointer import _path_str
+    if isinstance(state, dict) and "params" in state:
+        state = state["params"]
+    flat, _ = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        node = state
+        for e in path:
+            node = node[_path_str(e)] if isinstance(node, dict) \
+                else node[int(_path_str(e))]
+        arr = jnp.asarray(node)
+        if arr.ndim == leaf.ndim + 1:
+            arr = jnp.mean(arr.astype(jnp.float32), axis=0)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree.unflatten(jax.tree.structure(template), leaves)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
+# ---------------------------------------------------------------------------
+
+class DecodeServer:
+    """Greedy continuous-batching decode over a paged KV pool.
+
+    Drive with :meth:`enqueue` + :meth:`run` (or :meth:`step` for
+    external control loops). Finished sessions accumulate in
+    ``self.finished``; no session is ever dropped — a prompt that can
+    never fit (``plen > pad_len`` or a footprint larger than the whole
+    pool) is rejected at enqueue instead of deadlocking the queue.
+    """
+
+    def __init__(self, model: Model, params: PyTree, cfg: ServeConfig):
+        if model.cfg.family not in ("dense", "vlm", "audio", "moe"):
+            raise ValueError(
+                f"paged serving supports KV-cache families, "
+                f"got {model.cfg.family}")
+        if model.has_frontend:
+            raise ValueError("paged serving takes token prompts only")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.pages = model.init_paged_cache(cfg.num_blocks, cfg.block_size)
+        self.alloc = BlockAllocator(cfg.num_blocks)
+        self.queue: List[Session] = []
+        self.running: List[Session] = []
+        self.finished: List[Session] = []
+        self.engine_step = 0
+        self.prefill_count = 0
+        self.decode_steps = 0
+        self.swap_log: List[Dict[str, Any]] = []
+        self._watch = None                      # (checkpointer, every, step)
+
+        mb, tw = cfg.max_batch, cfg.table_width
+        self._free_rows = list(range(mb - 1, -1, -1))
+        self._tok = np.zeros((mb,), np.int32)
+        self._pos = np.zeros((mb,), np.int32)
+        self._bt = np.full((mb, tw), SCRATCH_BLOCK, np.int32)
+
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+
+    # -- jitted bodies ---------------------------------------------------
+    def _prefill_impl(self, params, pages, tokens, length, block_table):
+        """tokens [1, pad_len] (right-padded); length [1]; block_table
+        [1, tw]. One forward pass writes the whole prompt's KV into the
+        session's pages and emits the first generated token."""
+        logits, _, cache = self.model.forward(params, tokens,
+                                              collect_cache=True)
+        pages = write_prefill_to_pages(pages, cache["k"], cache["v"],
+                                       block_table)
+        last = jnp.take_along_axis(
+            logits, (length - 1)[:, None, None], axis=1)[:, 0]
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), pages
+
+    def _decode_impl(self, params, pages, bt, pos, tok):
+        logits, pages = self.model.paged_decode_step(params, pages, bt,
+                                                     pos, tok)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), pages
+
+    # -- session lifecycle ----------------------------------------------
+    def enqueue(self, prompt: Sequence[int], max_new: Optional[int] = None,
+                sid: Optional[int] = None) -> Session:
+        prompt = np.asarray(prompt, np.int32)
+        max_new = self.cfg.max_new if max_new is None else max_new
+        if prompt.shape[0] > self.cfg.pad_len:
+            raise ValueError(
+                f"prompt len {prompt.shape[0]} > pad_len {self.cfg.pad_len}")
+        if not (1 <= max_new <= self.cfg.max_new):
+            raise ValueError(f"max_new {max_new} outside [1, "
+                             f"{self.cfg.max_new}]")
+        sess = Session(
+            sid=len(self.queue) + len(self.running) + len(self.finished)
+            if sid is None else sid,
+            prompt=prompt, max_new=max_new, t_enqueue=time.perf_counter())
+        need = sess.blocks_needed(self.cfg.block_size)
+        if need > self.alloc.num_blocks - 1:
+            raise ValueError(f"session needs {need} blocks; pool has "
+                             f"{self.alloc.num_blocks - 1}")
+        self.queue.append(sess)
+        return sess
+
+    def _admit(self) -> None:
+        """FIFO admission with head-of-line blocking: stop at the first
+        session that doesn't fit — later arrivals must not overtake it
+        (fairness over packing)."""
+        while self.queue and self._free_rows:
+            sess = self.queue[0]
+            need = sess.blocks_needed(self.cfg.block_size)
+            if not self.alloc.can_alloc(need):
+                return
+            self.queue.pop(0)
+            t0 = time.perf_counter()
+            sess.blocks = self.alloc.alloc(need)
+            sess.row = self._free_rows.pop()
+            table = session_table(sess.blocks, self.cfg.table_width)
+            toks = np.zeros((1, self.cfg.pad_len), np.int32)
+            toks[0, :sess.plen] = sess.prompt
+            first, self.pages = self._prefill(
+                self.params, self.pages, jnp.asarray(toks),
+                jnp.asarray([sess.plen], jnp.int32),
+                jnp.asarray([table], jnp.int32))
+            first = int(np.asarray(first)[0])
+            sess.generated.append(first)
+            sess.token_times.append(time.perf_counter() - t0)
+            sess.state = "running"
+            self.prefill_count += 1
+            self._bt[sess.row] = table
+            self._tok[sess.row] = first
+            self._pos[sess.row] = sess.plen
+            self.running.append(sess)
+            if self._is_finished(sess, first):
+                self._evict(sess)
+
+    def _is_finished(self, sess: Session, tok: int) -> bool:
+        return (len(sess.generated) >= sess.max_new
+                or (self.cfg.eos_id is not None and tok == self.cfg.eos_id))
+
+    def _evict(self, sess: Session) -> None:
+        self.alloc.free(sess.blocks)
+        sess.blocks = []
+        self._free_rows.append(sess.row)
+        self._bt[sess.row] = SCRATCH_BLOCK
+        self._tok[sess.row] = 0
+        self._pos[sess.row] = 0
+        sess.row = -1
+        sess.state = "done"
+        sess.t_done = time.perf_counter()
+        self.running.remove(sess)
+        self.finished.append(sess)
+
+    # -- checkpoint hot-swap ---------------------------------------------
+    def swap_params(self, params: PyTree, tag: str = "manual") -> None:
+        """Install new weights; takes effect on the next decode step.
+        In-flight sessions keep their KV pages and positions — the cache
+        holds context tokens, not weight state, so generation simply
+        continues under the new model."""
+        self.params = params
+        self.swap_log.append({
+            "engine_step": self.engine_step, "tag": tag,
+            "in_flight": [s.sid for s in self.running]})
+
+    def attach_checkpointer(self, ckpt, template: PyTree,
+                            every: int = 8) -> None:
+        """Poll ``ckpt`` (a ``Checkpointer``) every ``every`` engine
+        steps; any newer step is restored, peer-folded and swapped in."""
+        self._watch = {"ckpt": ckpt, "template": template, "every": every,
+                       "seen": ckpt.latest_step()}
+
+    def _maybe_swap(self) -> None:
+        w = self._watch
+        if w is None or self.engine_step % w["every"]:
+            return
+        step = w["ckpt"].poll(w["seen"])
+        if step is None:
+            return
+        state, _ = w["ckpt"].restore(step)
+        self.swap_params(
+            serving_params_from_checkpoint(state, w["template"]),
+            tag=f"ckpt:{step}")
+        w["seen"] = step
+
+    # -- engine loop -----------------------------------------------------
+    def step(self) -> bool:
+        """Admit, run one batched decode step, evict finished sessions.
+        Returns False once the engine is fully drained."""
+        self._maybe_swap()
+        self._admit()
+        if not self.running:
+            return bool(self.queue)
+        t0 = time.perf_counter()
+        ntok, self.pages = self._decode(
+            self.params, self.pages, jnp.asarray(self._bt),
+            jnp.asarray(self._pos), jnp.asarray(self._tok))
+        ntok = np.asarray(ntok)
+        dt = time.perf_counter() - t0
+        self.decode_steps += 1
+        for sess in list(self.running):
+            tok = int(ntok[sess.row])
+            sess.generated.append(tok)
+            sess.token_times.append(dt)
+            self._tok[sess.row] = tok
+            self._pos[sess.row] += 1
+            if self._is_finished(sess, tok):
+                self._evict(sess)
+        self.engine_step += 1
+        return True
+
+    def run(self, max_steps: Optional[int] = None) -> List[Session]:
+        steps = 0
+        while self.step():
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return self.finished
+
+    def assert_quiescent(self) -> None:
+        """Invariant check after a drain: every block reclaimed, every
+        row free, nothing in flight."""
+        assert not self.queue and not self.running, \
+            (len(self.queue), len(self.running))
+        free = self.alloc.free_blocks
+        assert free == self.alloc.num_blocks - 1, \
+            f"block leak: {self.alloc.num_blocks - 1 - free} unreclaimed"
+        assert len(self._free_rows) == self.cfg.max_batch
+
+    def stats(self) -> Dict[str, float]:
+        times = [t for s in self.finished for t in s.token_times[1:]]
+        ttft = [s.token_times[0] for s in self.finished]
+        toks = sum(len(s.generated) for s in self.finished)
+        return {
+            "sessions": len(self.finished),
+            "tokens": toks,
+            "decode_steps": self.decode_steps,
+            "prefills": self.prefill_count,
+            "p50_tok_s": float(np.percentile(times, 50)) if times else 0.0,
+            "p99_tok_s": float(np.percentile(times, 99)) if times else 0.0,
+            "p50_ttft_s": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "swaps": len(self.swap_log),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Sequential baseline (pre-engine serve loop)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _sequential_fns(model: Model, pad_len: int, max_new: int):
+    """Jitted (prefill, decode) pair for the sequential baseline, cached
+    per (model, shape) so repeated baseline runs never re-trace (a
+    fresh-jit baseline would bill tracing to the timed region and
+    flatter the engine in benchmarks/serving.py)."""
+    max_len = pad_len + max_new
+
+    def prefill(params, tokens, length):
+        logits, _, cache = model.forward(params, tokens, collect_cache=True)
+        cache = model.prefill_cache_to_decode(cache, max_len, pad_len,
+                                              lengths=length)
+        last = jnp.take_along_axis(
+            logits, (length - 1)[:, None, None], axis=1)[:, 0]
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), cache
+
+    def decode(params, cache, tok):
+        logits, cache = model.decode_step(params, cache, tok)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return jax.jit(prefill), jax.jit(decode)
+
+
+def run_sequential(model: Model, params: PyTree,
+                   prompts: Sequence[Sequence[int]], max_new: int,
+                   pad_len: int) -> List[Session]:
+    """One session at a time against a dense cache — the old
+    ``launch/serve.py`` loop, minus its prompt replay (it now uses the
+    decode-ready prefill handoff). The benchmark baseline: identical
+    greedy tokens to the engine, none of the batching."""
+    if model.has_frontend:
+        raise ValueError("run_sequential takes token prompts only")
+    recurrent = model.cfg.family in ("ssm", "hybrid")
+    prefill, decode = _sequential_fns(model, pad_len, max_new)
+    out = []
+    for sid, prompt in enumerate(prompts):
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.shape[0] > pad_len:
+            raise ValueError(f"prompt len {prompt.shape[0]} > {pad_len}")
+        if recurrent and prompt.shape[0] != pad_len:
+            # recurrent state absorbs pad tokens — exact length only
+            raise ValueError(
+                f"{model.cfg.family} prompts must be exactly pad_len="
+                f"{pad_len} (got {prompt.shape[0]})")
+        sess = Session(sid=sid, prompt=prompt, max_new=max_new,
+                       t_enqueue=time.perf_counter())
+        toks = np.zeros((1, pad_len), np.int32)
+        toks[0, :sess.plen] = prompt
+        t0 = time.perf_counter()
+        tok, cache = prefill(params, jnp.asarray(toks),
+                             jnp.asarray([sess.plen], jnp.int32))
+        tok_host = int(np.asarray(tok)[0])
+        sess.generated.append(tok_host)
+        sess.token_times.append(time.perf_counter() - t0)
+        while len(sess.generated) < max_new:
+            t0 = time.perf_counter()
+            tok, cache = decode(params, cache, tok)
+            tok_host = int(np.asarray(tok)[0])
+            sess.generated.append(tok_host)
+            sess.token_times.append(time.perf_counter() - t0)
+        sess.state = "done"
+        sess.t_done = time.perf_counter()
+        out.append(sess)
+    return out

@@ -78,6 +78,49 @@ def test_decode_attention_length_one():
     np.testing.assert_allclose(out, expect, atol=1e-4)
 
 
+@pytest.mark.parametrize("s,block_k", [(98, 64), (1030, 512), (7, 8),
+                                       (513, 512)])
+def test_decode_attention_odd_lengths(s, block_k):
+    """Regression (ISSUE 8 satellite): non-power-of-two caches used to
+    shrink the K block via ``while s % bk: bk //= 2`` — degrading to
+    tiny tiles. The fixed path pads the cache view to a block multiple
+    and keeps full tiles; results must still match the oracle exactly,
+    including a length right at the cache edge."""
+    from repro.kernels.decode_attention import decode_attention_fwd
+    b, h, kvh, d = 2, 4, 2, 16
+    q = _arr((b, h, d), jnp.float32)
+    kc, vc = _arr((b, s, kvh, d), jnp.float32), _arr((b, s, kvh, d),
+                                                     jnp.float32)
+    lens = jnp.asarray([s, max(1, s - 3)], jnp.int32)
+    out = decode_attention_fwd(q, kc, vc, lens, block_k=block_k,
+                               interpret=True)
+    expect = ref.decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,nblk,bs,h,kvh,d", [
+    (2, 4, 16, 8, 2, 32), (1, 8, 8, 4, 4, 16), (3, 2, 32, 6, 1, 16),
+])
+def test_paged_decode_attention_sweep(b, nblk, bs, h, kvh, d, dtype):
+    nb = 1 + b * nblk
+    q = _arr((b, h, d), dtype)
+    kp, vp = _arr((nb, bs, kvh, d), dtype), _arr((nb, bs, kvh, d), dtype)
+    bt = jnp.asarray(RNG.permutation(np.arange(1, nb)).reshape(b, nblk),
+                     jnp.int32)
+    lens = jnp.asarray(RNG.integers(1, nblk * bs + 1, size=(b,)), jnp.int32)
+    out = ops.paged_decode_attention(q, kp, vp, bt, lens)
+    expect = ref.paged_decode_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=_tol(dtype) * 4, rtol=_tol(dtype))
+
+
 # ---------------------------------------------------------------------------
 # ssd scan
 # ---------------------------------------------------------------------------
