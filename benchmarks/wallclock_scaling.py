@@ -6,9 +6,9 @@ links is what actually limits scale. This benchmark unrolls one FL
 iteration of every registered technique into messages
 (``core/transport.py``), times them over the lognormal-wireless link
 profile, and reports measured bytes + simulated seconds per iteration
-across N in {8 .. 65536}.
+across N in {8 .. 2^20}, plus the process peak RSS after each row.
 
-Three engines cover the range:
+Four engines cover the range:
 
 - ``heap``   — per-message discrete-event sim (``runtime/network.py``);
   run alongside the vector engine at N <= 125 as a byte- and
@@ -16,10 +16,16 @@ Three engines cover the range:
 - ``vector`` — batched segment-op sim (``runtime/vector_network.py``)
   over ``ArrayMessagePlan``; the default whenever the plan
   materializes under the message budget.
+- ``super``  — the hybrid closed-form/vectorized engine
+  (``runtime/super_network.py``) consuming symbolic
+  ``SuperMessagePlan`` recipes: O(rounds) vector ops instead of
+  O(messages), transcript-identical on this profile. Cross-checked
+  against the vector engine at N=1024, the only engine that reaches
+  N=2^20 (one MAR iteration there is ~21M messages — never built).
 - ``closed`` — O(N)/O(N * chunk) closed forms for the two O(N^2)
   baselines (``all_to_all_seconds`` / ``ring_seconds``) past the
-  budget, cross-checked against the materialized engine at small N in
-  tests; bytes for those rows come from the analytic oracle.
+  budget; above N=65536 even those loops are skipped (an O(N^2)
+  baseline at N=2^20 is the point of the plot, not a row to wait on).
 
 Expected shape, from uplink serialization alone: MAR sends G*(M-1)
 models per peer, so its per-iteration wall-clock grows ~log N, while
@@ -27,9 +33,12 @@ AR's N-1 sends per peer grow ~N — the byte gap becomes a time gap on
 the *same* links. Measured bytes are cross-checked against the
 analytic oracles (``core/topology.py``) row by row (loss=0 parity).
 
-Also measures the heap-vs-vector engine speedup on one MAR iteration
-at N=1024 (the ISSUE-6 acceptance number) and emits it as a
-``speedup`` row + ``mar_n1024_speedup`` summary key.
+Speedup rows: heap-vs-vector on one MAR iteration at N=1024 (the
+ISSUE-6 acceptance number) and vector-vs-super at N=65536 — the
+latter is *gated*: the run reports FAIL unless super is >= 10x. A
+``plan_cache`` row reports the per-step planning time the
+``Federation`` plan memo saves at N=65536 (array and symbolic
+builds; a cache hit is a dict lookup).
 
 Emits CSV rows plus ``BENCH_comm.json`` (bytes + simulated seconds per
 technique per N, MAR-vs-AR growth ratios at large N) so the perf
@@ -38,6 +47,7 @@ trajectory has machine-readable data points.
 from __future__ import annotations
 
 import json
+import resource
 import sys
 import time
 
@@ -47,8 +57,9 @@ from benchmarks.common import emit, std_argparser
 from repro.core import topology
 from repro.core.aggregation import TECHNIQUES, make_aggregator
 from repro.core.moshpit import plan_grid
-from repro.core.transport import build_array_plan
+from repro.core.transport import build_array_plan, build_super_plan
 from repro.runtime.network import NetworkSim
+from repro.runtime.super_network import SuperNetworkSim
 from repro.runtime.vector_network import (VectorNetworkSim,
                                           all_to_all_seconds,
                                           ring_seconds)
@@ -61,8 +72,15 @@ MSG_BUDGET = 2_000_000
 #: at or below this N the heap engine re-runs every plan as an exact
 #: parity cross-check against the vector engine
 PARITY_MAX_N = 125
-#: the acceptance-criterion speedup measurement point
+#: the N at which the super engine is cross-checked against vector
+SUPER_PARITY_N = 1024
+#: largest N any plan is materialized at; past it the super engine
+#: (symbolic plans) carries every structured technique
+MAT_MAX_N = 65536
+#: the acceptance-criterion speedup measurement points
 SPEEDUP_N = 1024
+SUPER_SPEEDUP_N = 65536
+SUPER_SPEEDUP_GATE = 10.0
 
 
 def _est_messages(tech: str, plan) -> int:
@@ -76,6 +94,12 @@ def _est_messages(tech: str, plan) -> int:
     if tech == "mar":
         return plan.capacity * sum(m - 1 for m in plan.dims)
     return 2 * n                          # fedavg / hierarchical
+
+
+def _rss_mb() -> int:
+    """Process peak RSS in MB (ru_maxrss is KB on Linux)."""
+    return int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+               // 1024)
 
 
 def _measure_speedup(n: int, profile: str, model_bytes: float,
@@ -92,6 +116,28 @@ def _measure_speedup(n: int, profile: str, model_bytes: float,
     t_heap = min(_timed(heap.run, mplan) for _ in range(reps))
     t_vec = min(_timed(vec.run, aplan) for _ in range(reps))
     return t_heap, t_vec
+
+
+def _measure_super_speedup(n: int, profile: str, model_bytes: float,
+                           seed: int, reps: int = 5):
+    """Best-of-``reps`` wall time for one MAR iteration, vector vs
+    super, on identical links + plans (plan build timed separately —
+    that's the ``plan_cache`` row)."""
+    plan = plan_grid(n)
+    agg = make_aggregator("mar", plan)
+    t_build_array = time.perf_counter()
+    aplan = build_array_plan("mar", plan, None, model_bytes,
+                             num_rounds=agg.num_rounds)
+    t_build_array = time.perf_counter() - t_build_array
+    t_build_super = time.perf_counter()
+    splan = build_super_plan("mar", plan, None, model_bytes,
+                             num_rounds=agg.num_rounds)
+    t_build_super = time.perf_counter() - t_build_super
+    vec = VectorNetworkSim(n, profile=profile, seed=seed)
+    sup = SuperNetworkSim(n, profile=profile, seed=seed)
+    t_vec = min(_timed(vec.run, aplan) for _ in range(reps))
+    t_sup = min(_timed(sup.run, splan) for _ in range(reps))
+    return t_vec, t_sup, t_build_array, t_build_super
 
 
 def _timed(fn, *a):
@@ -112,11 +158,14 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.smoke:
-        peer_counts = (8, 16, 1024)
+        # one super parity row (N=1024) + the N=2^20 MAR headline
+        peer_counts = (8, 16, 1024, 1 << 20)
     elif args.full:
-        peer_counts = (8, 16, 64, 125, 512, 1024, 8192, 65536)
+        peer_counts = (8, 16, 64, 125, 512, 1024, 8192, 65536,
+                       1 << 17, 1 << 18, 1 << 20)
     else:
-        peer_counts = (8, 16, 64, 125, 1024, 8192, 65536)
+        peer_counts = (8, 16, 64, 125, 1024, 8192, 65536,
+                       1 << 17, 1 << 18, 1 << 20)
     model_bytes = args.model_mb * 1e6
 
     techniques = [t for t in ORDER if t in TECHNIQUES] + \
@@ -127,11 +176,18 @@ def main(argv=None) -> int:
         plan = plan_grid(n)
         mask = np.ones(n, np.float32)
         for tech in techniques:
+            if n > MAT_MAX_N and args.smoke and tech != "mar":
+                continue      # smoke: only the MAR headline up there
             agg = make_aggregator(tech, plan)
             analytic = topology.iteration_bytes(
                 tech, n, model_bytes, plan, num_rounds=agg.num_rounds)
             est = _est_messages(tech, plan)
-            if est > MSG_BUDGET:
+            if tech in ("ar", "rdfl") and (est > MSG_BUDGET
+                                           or n > MAT_MAX_N):
+                if n > MAT_MAX_N:
+                    emit("wallclock_skip", technique=tech, n_peers=n,
+                         reason="o_n2_baseline_above_materialized_tier")
+                    continue
                 # O(N^2) baseline past the budget: closed-form engine
                 closed = {"ar": all_to_all_seconds,
                           "rdfl": ring_seconds}[tech]
@@ -148,6 +204,26 @@ def main(argv=None) -> int:
                            grid=str(plan.dims), engine="closed",
                            messages=est, bytes=int(analytic),
                            analytic_bytes=int(analytic), parity=True,
+                           sim_s=round(sim_s, 4))
+            elif est > MSG_BUDGET or n > MAT_MAX_N:
+                # structured technique past the materialized tier:
+                # symbolic plan through the super engine — O(rounds),
+                # bytes still cross-checked against the oracle
+                sup = SuperNetworkSim(n, profile=args.profile,
+                                      seed=args.seed)
+                splan = build_super_plan(tech, plan, mask, model_bytes,
+                                         num_rounds=agg.num_rounds)
+                transcripts = [sup.run(splan)
+                               for _ in range(args.iters)]
+                tr = transcripts[-1]
+                parity = abs(tr.total_bytes - analytic) < 1.0
+                sim_s = float(np.mean([t.iteration_s
+                                       for t in transcripts]))
+                row = dict(technique=tech, n_peers=n,
+                           grid=str(plan.dims), engine="super",
+                           messages=tr.n_messages,
+                           bytes=int(tr.total_bytes),
+                           analytic_bytes=int(analytic), parity=parity,
                            sim_s=round(sim_s, 4))
             else:
                 aplan = build_array_plan(tech, plan, mask, model_bytes,
@@ -172,6 +248,22 @@ def main(argv=None) -> int:
                                                    t_vec.peer_finish_s))
                         parity = parity and same
                     engine = "vector+heap"
+                if n == SUPER_PARITY_N:
+                    # super cross-check: transcript-equal on this
+                    # profile (bytes, per-round times, finish vector)
+                    sup = SuperNetworkSim(n, profile=args.profile,
+                                          seed=args.seed)
+                    splan = build_super_plan(
+                        tech, plan, mask, model_bytes,
+                        num_rounds=agg.num_rounds)
+                    for t_vec in transcripts:
+                        t_sup = sup.run(splan)
+                        same = (t_sup.total_bytes == t_vec.total_bytes
+                                and t_sup.round_s == t_vec.round_s
+                                and np.array_equal(t_sup.peer_finish_s,
+                                                   t_vec.peer_finish_s))
+                        parity = parity and same
+                    engine += "+super"
                 sim_s = float(np.mean([t.iteration_s
                                        for t in transcripts]))
                 row = dict(technique=tech, n_peers=n,
@@ -180,22 +272,24 @@ def main(argv=None) -> int:
                            bytes=int(tr.total_bytes),
                            analytic_bytes=int(analytic), parity=parity,
                            sim_s=round(sim_s, 4))
+            row["peak_rss_mb"] = _rss_mb()
             per_iter_s[(tech, n)] = row["sim_s"]
             emit("wallclock", **row)
             results.append(row)
 
     # acceptance summary: growth factor from the smallest to the
-    # largest N — MAR should track ~log N, AR ~N, on identical links —
-    # plus the AR/MAR wall-clock ratio at every large N
+    # largest N each technique reached — MAR should track ~log N, AR
+    # ~N, on identical links — plus the AR/MAR wall-clock ratio at
+    # every large N where both engines produced rows
     lo, hi = peer_counts[0], peer_counts[-1]
     summary = {}
     for tech in ("mar", "ar"):
-        # skipped rows (closed-form refused, e.g. regions pair terms)
-        # leave holes — guard every lookup
-        if ((tech, lo) in per_iter_s and (tech, hi) in per_iter_s
-                and per_iter_s[(tech, lo)] > 0):
+        ns = sorted(nn for (t2, nn) in per_iter_s if t2 == tech)
+        if len(ns) >= 2 and per_iter_s[(tech, ns[0])] > 0:
             summary[f"{tech}_growth"] = round(
-                per_iter_s[(tech, hi)] / per_iter_s[(tech, lo)], 2)
+                per_iter_s[(tech, ns[-1])] / per_iter_s[(tech, ns[0])],
+                2)
+            summary[f"{tech}_growth_n_hi"] = ns[-1]
     summary["n_growth"] = round(hi / lo, 2)
     summary["logn_growth"] = round(np.log2(hi) / np.log2(lo), 2)
     for n in peer_counts:
@@ -213,8 +307,31 @@ def main(argv=None) -> int:
              heap_ms=round(t_heap * 1e3, 2),
              vector_ms=round(t_vec * 1e3, 2), speedup=speedup)
 
+    if SUPER_SPEEDUP_N in peer_counts:
+        t_vec, t_sup, t_ba, t_bs = _measure_super_speedup(
+            SUPER_SPEEDUP_N, args.profile, model_bytes, args.seed)
+        speedup = round(t_vec / t_sup, 1)
+        gate = speedup >= SUPER_SPEEDUP_GATE
+        summary[f"mar_n{SUPER_SPEEDUP_N}_super_speedup"] = speedup
+        summary["super_speedup_gate_10x"] = (
+            "pass" if gate else "FAIL")
+        emit("super_speedup", n_peers=SUPER_SPEEDUP_N,
+             technique="mar", vector_ms=round(t_vec * 1e3, 2),
+             super_ms=round(t_sup * 1e3, 2), speedup=speedup,
+             gate_10x="pass" if gate else "FAIL")
+        # the planning time the Federation plan memo saves per step
+        # once the (grid, mask, parity) key repeats: the whole build
+        # (a cache hit is a dict lookup)
+        summary["plan_build_array_ms"] = round(t_ba * 1e3, 2)
+        summary["plan_build_super_ms"] = round(t_bs * 1e3, 2)
+        emit("plan_cache", n_peers=SUPER_SPEEDUP_N, technique="mar",
+             array_build_ms=round(t_ba * 1e3, 2),
+             super_build_ms=round(t_bs * 1e3, 2),
+             saved_per_hit_vector_ms=round(t_ba * 1e3, 2),
+             saved_per_hit_super_ms=round(t_bs * 1e3, 2))
+
     emit("wallclock_summary", profile=args.profile, n_lo=lo, n_hi=hi,
-         **summary)
+         peak_rss_mb=_rss_mb(), **summary)
 
     with open(args.out, "w") as f:
         json.dump({"benchmark": "wallclock_scaling",

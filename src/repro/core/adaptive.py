@@ -100,6 +100,28 @@ def candidate_grids(n_peers: int, m_min: int = 2, m_max: int = 8,
     return out
 
 
+def carry_placement(old: GridPlan, new: GridPlan) -> GridPlan:
+    """Carry the live plan's peer ordering onto a proposed grid.
+
+    A dims proposal is built placement-blind, so applying it would
+    scatter a clustered permutation until the placement policy's next
+    observe — one iteration of re-mixed regions, which also costs the
+    superpeer engine its closed-form (region-pure) intra-cluster tiers
+    right when the fleet regroups. Slots don't transfer across dims,
+    but the peer *order* does: peers are re-packed into the new grid
+    in their old slot order, so contiguous clusters stay contiguous
+    through the regroup. Identity placements pass through untouched
+    (``with_placement`` normalizes the identity permutation away, so
+    this cannot turn an unplaced plan into a placed one)."""
+    if old.placement is None or new.placement is not None:
+        return new
+    n = old.n_peers
+    order = np.argsort(old.slot_of(np.arange(n)), kind="stable")
+    perm = np.empty(n, np.int64)
+    perm[order] = np.arange(n)
+    return new.with_placement(perm)
+
+
 def validate_proposal(plan: GridPlan, n_peers: int,
                       exact_only: bool = False) -> GridPlan:
     """Reject proposals the runtime cannot execute: wrong peer count,
@@ -254,8 +276,9 @@ class TailAwareController(GroupSizeController):
         else:
             return None
         self._cool = self.cooldown
-        return validate_proposal(self.candidates[j], plan.n_peers,
-                                 exact_only=self.exact_only)
+        return validate_proposal(
+            carry_placement(plan, self.candidates[j]), plan.n_peers,
+            exact_only=self.exact_only)
 
     def rebind(self, plan):
         super().rebind(plan)
@@ -283,6 +306,6 @@ class ScheduleController(GroupSizeController):
         dims = self.schedule.get(t)
         if dims is None or dims == tuple(plan.dims):
             return None
-        return validate_proposal(GridPlan(plan.n_peers, dims),
-                                 plan.n_peers,
-                                 exact_only=self.exact_only)
+        return validate_proposal(
+            carry_placement(plan, GridPlan(plan.n_peers, dims)),
+            plan.n_peers, exact_only=self.exact_only)

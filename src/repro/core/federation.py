@@ -143,7 +143,11 @@ class FederationConfig:
     # (runtime/transport_base.py): "sim" models them over the link
     # profile above; "vector_sim" is the batched segment-op engine —
     # byte- and time-identical transcripts, orders of magnitude faster
-    # at large N (runtime/vector_network.py); "socket" runs every peer
+    # at large N (runtime/vector_network.py); "super_sim" goes one
+    # tier further — closed-form intra-cluster rounds plus the vector
+    # engine for cross-cluster flows, same transcripts on uniform/
+    # wireless, O(rounds) not O(messages), reaching N=2^20
+    # (runtime/super_network.py); "socket" runs every peer
     # as an asyncio task on loopback TCP and really transmits
     # int8-serialized update tensors — identical transcript shape, so
     # the ledger, churn demotion and history are backend-agnostic
@@ -238,6 +242,13 @@ class Federation:
                                        seed=cfg.seed,
                                        link_params=cfg.link_params)
         self.last_transcript = None
+        # per-iteration plan memo: (grid, mask, parity, KD) -> built
+        # plan. Plans are immutable once built, so identical steps
+        # reuse them; regroup/resize clear the cache (the grid id in
+        # the key would already miss, clearing just bounds growth).
+        self._plan_cache: Dict[Tuple, Any] = {}
+        self.plan_cache_hits = 0
+        self.plan_cache_misses = 0
         if self.placement_policy is not None:
             self.placement_policy.bind_prober(self._run_probe)
         self.lifecycle = lifecycle if lifecycle is not None else \
@@ -387,6 +398,7 @@ class Federation:
 
         self.cfg = dataclasses.replace(self.cfg, n_peers=new_n)
         self.plan = new_plan
+        self._plan_cache.clear()
         self.pipeline = self._build_pipeline(self.cfg, new_plan)
         if self.lifecycle.n_peers != new_n:
             self.lifecycle.resize(new_n)
@@ -444,6 +456,7 @@ class Federation:
         if new_plan == self.plan:
             return state
         self.plan = new_plan
+        self._plan_cache.clear()
         self.pipeline = self.pipeline.with_plan(new_plan)
         pipe = self.pipeline.resize_state(state.pipe, n, n)
         self._it_fn = jax.jit(self._iteration,
@@ -508,6 +521,39 @@ class Federation:
         return out["p"], out["m"], pipe
 
     # ------------------------------------------------------------------
+    def _build_plan(self, a: np.ndarray, n_active: int,
+                    iteration: int, use_kd: bool,
+                    kd_logit_bytes: float) -> Any:
+        """The iteration's transport plan, in the format the active
+        transport negotiates (``Transport.plan_format``): symbolic
+        recipes for ``super_sim``, array plans for ``vector_sim``,
+        list plans for the heap/socket backends. Memoized on
+        (grid, mask bytes, iteration parity, KD shape) — within a
+        stable membership window every step rebuilds the identical
+        plan, so the cache turns per-step planning time into a dict
+        hit. ``regroup``/``resize`` invalidate."""
+        fmt = getattr(self.network, "plan_format", "list")
+        key = (id(self.plan), a.tobytes(), iteration % 2, fmt,
+               use_kd, kd_logit_bytes, n_active)
+        plan = self._plan_cache.get(key)
+        if plan is not None:
+            self.plan_cache_hits += 1
+            return plan
+        self.plan_cache_misses += 1
+        if fmt == "super":
+            build = self.pipeline.super_plan
+        elif fmt == "array":
+            build = self.pipeline.array_plan
+        else:
+            build = self.pipeline.message_plan
+        plan = build(a, self.model_bytes, n_active, use_kd=use_kd,
+                     kd_logit_bytes=kd_logit_bytes)
+        if len(self._plan_cache) >= 8:   # parity x KD x mask drift
+            self._plan_cache.clear()
+        self._plan_cache[key] = plan
+        return plan
+
+    # ------------------------------------------------------------------
     def step(self, state: FederationState,
              masks: Optional[Tuple[np.ndarray, np.ndarray]] = None
              ) -> FederationState:
@@ -534,9 +580,9 @@ class Federation:
         # whichever transport is active.
         from repro.runtime.transport_base import demote_lost_senders
         n_active = int(a.sum())
-        mplan = self.pipeline.message_plan(
-            np.asarray(a), self.model_bytes, n_active, use_kd=use_kd,
-            kd_logit_bytes=self._kd_logit_bytes() if use_kd else 0)
+        mplan = self._build_plan(
+            np.asarray(a), n_active, state.iteration, use_kd,
+            self._kd_logit_bytes() if use_kd else 0)
         payloads = None
         if self.network.wants_payloads:
             from repro.runtime.socket_transport import \

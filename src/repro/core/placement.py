@@ -95,6 +95,7 @@ class LinkQualityEstimator:
         self.n_peers = n_peers
         self._secs: Dict[Tuple[int, int], float] = {}
         self._bytes: Dict[Tuple[int, int], float] = {}
+        self._baseline: Dict[Tuple[int, int], float] = {}
 
     @property
     def n_links(self) -> int:
@@ -157,6 +158,33 @@ class LinkQualityEstimator:
         return float(np.isfinite(c[mask]).sum()) / denom if denom \
             else 0.0
 
+    def rates(self) -> Dict[Tuple[int, int], float]:
+        """Current per-link seconds-per-byte estimates."""
+        return {k: self._secs[k] / b
+                for k, b in self._bytes.items() if b > 0}
+
+    def mark(self) -> None:
+        """Snapshot current rates as the drift baseline — call when a
+        clustering was produced from (and therefore reflects) them."""
+        self._baseline = self.rates()
+
+    def drift(self) -> float:
+        """Median relative change in per-link seconds-per-byte since
+        the last :meth:`mark` (0.0 without a baseline or overlap).
+
+        The statistic clustered placement watches between scheduled
+        re-cluster ticks: link quality moving by, say, 2x on half the
+        observed links means the permutation was computed for a
+        network that no longer exists. Median, not max — one link
+        blipping shouldn't trigger a fleet-wide regroup."""
+        if not self._baseline:
+            return 0.0
+        cur = self.rates()
+        rel = [abs(cur[k] - v) / v
+               for k, v in self._baseline.items()
+               if k in cur and v > 0]
+        return float(np.median(rel)) if rel else 0.0
+
     def resize(self, new_n: int) -> None:
         """Elastic membership invalidates link identities past the
         survivor range; drop evidence touching departed peers."""
@@ -165,6 +193,8 @@ class LinkQualityEstimator:
                           if k[0] < new_n and k[1] < new_n}
             self._bytes = {k: v for k, v in self._bytes.items()
                            if k[0] < new_n and k[1] < new_n}
+            self._baseline = {k: v for k, v in self._baseline.items()
+                              if k[0] < new_n and k[1] < new_n}
         self.n_peers = new_n
 
 
@@ -263,7 +293,9 @@ def cluster_labels(features: np.ndarray, k: Optional[int] = None,
     return out
 
 
-def cluster_permutation(labels: np.ndarray) -> np.ndarray:
+def cluster_permutation(labels: np.ndarray,
+                        capacity: Optional[int] = None,
+                        align: Optional[int] = None) -> np.ndarray:
     """peer→slot: clusters pack contiguous slot ranges, largest
     cluster first (ties broken by lowest member index); within a
     cluster peers keep relative order.
@@ -274,19 +306,42 @@ def cluster_permutation(labels: np.ndarray) -> np.ndarray:
     cannot shift every later cluster off its block boundary (which
     would re-mix regions inside low-axis blocks and forfeit the
     placement win). Stable: re-clustering to the same labels is the
-    identity update."""
+    identity update.
+
+    With ``capacity`` (> n_peers) the returned permutation covers the
+    whole grid, assigning the virtual entities explicitly instead of
+    leaving :meth:`GridPlan.with_placement` to fill leftover slots
+    blindly: each cluster is padded with virtuals up to the next
+    multiple of ``align`` (the grid's sub-block size) while spare
+    capacity lasts, so a churn-shrunk cluster absorbs its own padding
+    rather than pulling the next cluster across a sub-block boundary.
+    Remaining virtuals fill the tail. ``capacity=None`` (the default)
+    is the historical peer-only permutation, bit-for-bit."""
     labels = np.asarray(labels)
-    perm = np.empty(labels.size, np.int64)
+    n = labels.size
+    cap = n if capacity is None else int(capacity)
+    if cap < n:
+        raise ValueError(f"capacity {cap} < {n} peers")
+    perm = np.empty(cap, np.int64)
     order = sorted(
         np.unique(labels).tolist(),
         key=lambda c: (-int((labels == c).sum()),
                        int(np.flatnonzero(labels == c)[0])))
     slot = 0
+    virt = n                      # next virtual entity id
     for c in order:
         members = np.flatnonzero(labels == c)
         perm[members] = np.arange(slot, slot + members.size)
         slot += members.size
-    return perm
+        if align and align > 1 and virt < cap:
+            pad = min((-slot) % align, cap - virt)
+            if pad:
+                perm[virt:virt + pad] = np.arange(slot, slot + pad)
+                virt += pad
+                slot += pad
+    if virt < cap:                # tail virtuals, in order
+        perm[virt:cap] = np.arange(slot, cap)
+    return perm if capacity is not None else perm[:n]
 
 
 # ---------------------------------------------------------------------------
@@ -386,13 +441,17 @@ class ClusteredPlacement(PlacementPolicy):
     def __init__(self, plan: GridPlan, seed: int = 0,
                  interval: int = 8, k: Optional[int] = None,
                  landmarks: int = 8, probe_bytes: float = 250_000.0,
-                 min_coverage: float = 0.9):
+                 min_coverage: float = 0.9,
+                 drift_threshold: float = 0.5,
+                 drift_min_interval: int = 2):
         super().__init__(plan, seed)
         self.interval = interval
         self.k = k
         self.n_landmarks = landmarks
         self.probe_bytes = probe_bytes
         self.min_coverage = min_coverage
+        self.drift_threshold = drift_threshold
+        self.drift_min_interval = drift_min_interval
         self.estimator = LinkQualityEstimator(plan.n_peers)
         self.labels: Optional[np.ndarray] = None
         self._last_cluster_t: Optional[int] = None
@@ -440,17 +499,28 @@ class ClusteredPlacement(PlacementPolicy):
         n = plan.n_peers
         if transcript is not None:
             self.estimator.update(transcript)
-        due = (self._last_cluster_t is None
-               or t - self._last_cluster_t >= self.interval)
+        since = (None if self._last_cluster_t is None
+                 else t - self._last_cluster_t)
+        due = since is None or since >= self.interval
+        if not due and since >= self.drift_min_interval \
+                and self.estimator.drift() > self.drift_threshold:
+            # link quality moved enough that the current permutation
+            # reflects a stale network — re-cluster ahead of cadence,
+            # but never faster than drift_min_interval (the same
+            # rate-limit contract the probe path honors)
+            due = True
         if due:
             labels = self._recluster(n)
             if labels is not None:
                 self.labels = labels
                 self._last_cluster_t = t
+                self.estimator.mark()
         if self.labels is None or self.labels.size != n:
             return None
-        target = plan.with_placement(
-            cluster_permutation(self.labels))
+        target = plan.with_placement(cluster_permutation(
+            self.labels, capacity=plan.capacity,
+            align=(plan.capacity // plan.dims[0]
+                   if plan.depth else None)))
         return target if target != plan else None
 
     def rebind(self, plan):

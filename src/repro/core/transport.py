@@ -648,3 +648,113 @@ def build_array_plan(technique: str, plan: GridPlan,
     if technique == "gossip":
         return gossip_plan_arrays(plan, mask, model_bytes, num_rounds)
     return _ARRAY_PLANNERS[technique](plan, mask, model_bytes)
+
+
+# ---------------------------------------------------------------------------
+# symbolic superpeer plans (the N=10^6 tier)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SuperMessagePlan:
+    """One FL iteration's traffic as a *recipe*, not messages.
+
+    Where :class:`ArrayMessagePlan` materializes every ``(src, dst,
+    nbytes)`` tuple, this plan stores only what generated them — the
+    technique, the grid (with placement), the active mask and the byte
+    sizes — O(N) state independent of message count. The superpeer
+    engine (``runtime/super_network.py``) walks the same per-technique
+    round structure the array planners would emit, timing structured
+    rounds with the closed-form recurrences of
+    ``runtime/vector_network.py`` and materializing only the rounds
+    that need the full vector path (pairwise WAN terms, loss). Because
+    the recipe *determines* the array plan, :meth:`to_array_plan`
+    rebuilds the exact messages on demand — the engine's fallback, and
+    the parity tests' oracle.
+
+    ``use_kd`` prepends the MKD prefix rounds at ``raw_model_bytes``
+    (distillation rides uncompressed state, as
+    ``AggregationPipeline.message_plan`` bills it) with
+    ``kd_logit_bytes`` logits.
+    """
+
+    technique: str
+    plan: GridPlan
+    model_bytes: float                   # wire bytes per agg message
+    mask: Optional[np.ndarray] = None
+    num_rounds: Optional[int] = None
+    mode: str = "naive"
+    use_kd: bool = False
+    raw_model_bytes: float = 0.0
+    kd_logit_bytes: float = 0.0
+
+    @property
+    def n_peers(self) -> int:
+        return self.plan.n_peers
+
+    @property
+    def n_nodes(self) -> int:
+        return self.plan.n_peers + (
+            1 if self.technique in ("fedavg", "hierarchical") else 0)
+
+    @property
+    def kd_rounds(self) -> int:
+        if not self.use_kd:
+            return 0
+        return (self.plan.depth if self.num_rounds is None
+                else self.num_rounds)
+
+    def n_messages_estimate(self) -> int:
+        """Upper-ish bound on materialized message count — the
+        engine's per-link-tracking budget check."""
+        n = self.plan.n_peers
+        k = _active_ids(self.mask, n).size
+        depth = self.plan.depth
+        rounds = depth if self.num_rounds is None else self.num_rounds
+        m = max(self.plan.dims)
+        est = {
+            "mar": rounds * k * (m - 1),
+            "gossip": rounds * k,
+            "fedavg": 2 * k,
+            "hierarchical": 2 * k + 2 * (k // max(
+                self.plan.dims[-1], 1) + 1),
+            "ar": k * (k - 1),
+            "rdfl": k * (k - 1),
+        }.get(self.technique, k * rounds)
+        if self.use_kd:
+            est += self.kd_rounds * k * m
+        return int(est)
+
+    def to_array_plan(self) -> ArrayMessagePlan:
+        """Materialize the exact messages this recipe stands for."""
+        aplan = build_array_plan(self.technique, self.plan, self.mask,
+                                 self.model_bytes,
+                                 num_rounds=self.num_rounds,
+                                 mode=self.mode)
+        if self.use_kd:
+            aplan = with_mkd_traffic_arrays(
+                aplan, self.plan, self.mask, self.raw_model_bytes,
+                self.kd_logit_bytes, num_rounds=self.num_rounds)
+        return aplan
+
+
+def build_super_plan(technique: str, plan: GridPlan,
+                     mask: Optional[np.ndarray], model_bytes: float,
+                     num_rounds: Optional[int] = None,
+                     mode: str = "naive",
+                     use_kd: bool = False,
+                     raw_model_bytes: float = 0.0,
+                     kd_logit_bytes: float = 0.0) -> SuperMessagePlan:
+    """Symbolic counterpart of :func:`build_array_plan` — validates the
+    technique and freezes the recipe; no messages are materialized."""
+    if technique not in _ARRAY_PLANNERS:
+        raise ValueError(
+            f"no superpeer plan recipe for technique {technique!r}; "
+            f"known: {sorted(_ARRAY_PLANNERS)}")
+    if mask is not None:
+        mask = np.asarray(mask).copy()
+        mask.setflags(write=False)
+    return SuperMessagePlan(technique, plan, float(model_bytes),
+                            mask=mask, num_rounds=num_rounds, mode=mode,
+                            use_kd=use_kd,
+                            raw_model_bytes=float(raw_model_bytes),
+                            kd_logit_bytes=float(kd_logit_bytes))

@@ -107,13 +107,18 @@ def main(argv=None) -> int:
                     help="iterations without a heartbeat before a peer "
                          "is marked dead")
     ap.add_argument("--transport", default=None,
-                    choices=["sim", "vector_sim", "socket"],
+                    choices=["sim", "vector_sim", "super_sim",
+                             "socket"],
                     help="MessagePlan executor backend "
                          "(runtime/transport_base.py): 'sim' models "
                          "messages over --link-profile links; "
                          "'vector_sim' is the batched segment-op "
                          "engine with identical transcripts (use for "
-                         "large --peers); 'socket' runs every peer as "
+                         "large --peers); 'super_sim' adds closed-"
+                         "form intra-cluster tiers on top — identical "
+                         "transcripts on uniform/wireless, O(rounds) "
+                         "cost, for very large --peers; 'socket' runs "
+                         "every peer as "
                          "an asyncio task on loopback TCP and really "
                          "transmits int8-serialized update tensors. "
                          "Default: 'sim' when --link-profile is "

@@ -142,13 +142,20 @@ class LinkAccounting:
 
     def __init__(self, n_nodes: int, n_peers: int,
                  detail_max: Optional[int] = None, top_k: int = 32,
-                 compact_at: int = 4_000_000):
+                 compact_at: int = 4_000_000,
+                 track_links: bool = True):
         self.n_nodes = n_nodes
         self.top_k = top_k
         self.compact_at = compact_at
         if detail_max is None:
             detail_max = LINK_DETAIL_MAX_PEERS
         self.exact = n_peers <= detail_max
+        #: peer mode only: when False, skip the deferred per-link
+        #: (key, bytes) buffers entirely — per-node totals stay exact,
+        #: ``bytes_by_link`` / ``link_time_stats`` come back empty. The
+        #: superpeer engine disables tracking past a message budget
+        #: where even the deferred buffers would dominate memory.
+        self.track_links = track_links or self.exact
         self.links: Dict[Tuple[int, int], float] = {}
         self.link_secs: Dict[Tuple[int, int], float] = {}
         if not self.exact:
@@ -173,6 +180,8 @@ class LinkAccounting:
             self.rx[dst] += nbytes
             self.tx_s[src] += seconds
             self.rx_s[dst] += seconds
+            if not self.track_links:
+                return
             self._keys.append(np.asarray([src * self.n_nodes + dst]))
             self._sums.append(np.asarray([float(nbytes)]))
             self._secs.append(np.asarray([float(seconds)]))
@@ -182,8 +191,16 @@ class LinkAccounting:
 
     def add_batch(self, src: np.ndarray, dst: np.ndarray,
                   nbytes: np.ndarray,
-                  seconds: Optional[np.ndarray] = None) -> None:
-        """Array path (the vectorized engine): one call per round."""
+                  seconds: Optional[np.ndarray] = None,
+                  unique: bool = False) -> None:
+        """Array path (the vectorized engine): one call per round.
+
+        ``unique=True`` asserts that ``src`` has no repeated ids and
+        ``dst`` has no repeated ids (each node sends and receives at
+        most once in this batch) — peer-mode totals then use direct
+        indexed adds instead of bincounts. Each per-node total still
+        receives exactly one addend, so the result is bitwise the same.
+        """
         if src.size == 0:
             return
         if seconds is None:
@@ -201,20 +218,50 @@ class LinkAccounting:
                 links[kk] = links.get(kk, 0.0) + v
                 lsecs[kk] = lsecs.get(kk, 0.0) + s
             return
-        self.tx += np.bincount(src, weights=nbytes,
-                               minlength=self.n_nodes)
-        self.rx += np.bincount(dst, weights=nbytes,
-                               minlength=self.n_nodes)
-        self.tx_s += np.bincount(src, weights=seconds,
-                                 minlength=self.n_nodes)
-        self.rx_s += np.bincount(dst, weights=seconds,
-                                 minlength=self.n_nodes)
+        if unique:
+            self.tx[src] += nbytes
+            self.rx[dst] += nbytes
+            self.tx_s[src] += seconds
+            self.rx_s[dst] += seconds
+        else:
+            self.tx += np.bincount(src, weights=nbytes,
+                                   minlength=self.n_nodes)
+            self.rx += np.bincount(dst, weights=nbytes,
+                                   minlength=self.n_nodes)
+            self.tx_s += np.bincount(src, weights=seconds,
+                                     minlength=self.n_nodes)
+            self.rx_s += np.bincount(dst, weights=seconds,
+                                     minlength=self.n_nodes)
+        if not self.track_links:
+            return
         self._keys.append(src * self.n_nodes + dst)
         self._sums.append(np.asarray(nbytes, float))
         self._secs.append(np.asarray(seconds, float))
         self._pending += src.size
         if self._pending > self.compact_at:
             self._compact()
+
+    def add_uniform_round(self, src: np.ndarray, dst: np.ndarray,
+                          nbytes: float,
+                          seconds: np.ndarray) -> None:
+        """Round where ``src`` and ``dst`` are each a permutation of
+        *all* nodes and every message carries ``nbytes`` bytes (a full
+        MAR pair round at exact capacity). Peer-mode byte totals then
+        add uniformly — each node gets exactly one ``nbytes`` addend,
+        so ``tx += nbytes`` is bitwise the indexed add — and the
+        seconds use the unique-indexed adds. Falls back to
+        :meth:`add_batch` whenever per-link keys are kept (copying
+        ``seconds``, which callers may hand in as a reused scratch
+        buffer — the fast path consumes it immediately, but the
+        fallback defers it into the per-link key buffers)."""
+        if self.exact or self.track_links:
+            self.add_batch(src, dst, np.full(src.size, nbytes),
+                           seconds.copy(), unique=True)
+            return
+        self.tx += nbytes
+        self.rx += nbytes
+        self.tx_s[src] += seconds
+        self.rx_s[dst] += seconds
 
     def _merge(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         keys = np.concatenate(self._keys) if self._keys else \
@@ -308,6 +355,12 @@ class Transport:
     #: a real transport serializes actual update tensors into its
     #: frames; the federation only encodes payloads when this is set
     wants_payloads: bool = False
+    #: the plan shape this backend runs fastest on: ``"list"``
+    #: (MessagePlan / ArrayMessagePlan, the default) or ``"super"``
+    #: (the symbolic :class:`~repro.core.transport.SuperMessagePlan`
+    #: recipe — no materialized messages). The federation negotiates
+    #: via this attribute; every backend still accepts list plans.
+    plan_format: str = "list"
 
     clock: float = 0.0
     iterations: int = 0
@@ -368,12 +421,15 @@ def build_transport(name: str, n_peers: int, *,
     ``"sim"`` — the discrete-event simulator over modeled links;
     ``"vector_sim"`` — the same link model timed with batched numpy
     segment ops (the large-N engine, byte-exact and time-equal vs
-    ``"sim"``); ``"socket"`` — real asyncio tasks over loopback TCP.
+    ``"sim"``); ``"super_sim"`` — the superpeer hybrid engine (closed
+    forms for intra-cluster rounds, the vector engine for the rest;
+    byte-exact always, time-equal on per-peer link profiles);
+    ``"socket"`` — real asyncio tasks over loopback TCP.
     """
     # importing the implementations registers them; lazy to avoid the
     # transport_base <-> network import cycle
     from repro.runtime import (network, socket_transport,  # noqa: F401
-                               vector_network)
+                               super_network, vector_network)
     if name not in TRANSPORTS:
         raise ValueError(f"unknown transport {name!r}; "
                          f"registered: {sorted(TRANSPORTS)}")

@@ -1,0 +1,453 @@
+"""Superpeer hybrid engine parity + satellites (ISSUE 9 acceptance).
+
+The ``super_sim`` backend must earn its O(rounds) cost model without
+giving up the drop-in contract the vector engine established: on every
+registered technique at every overlapping N the symbolic
+``SuperMessagePlan`` run reproduces the vector engine's transcript
+byte-for-byte, and — on per-peer (uniform / wireless) profiles —
+*equal*, not merely close, round and per-peer finish times. Lossy
+profiles delegate to an internal vector engine with a synced RNG
+stream, so even seeded loss + demotion stays exact. The closed-form
+group recurrences it leans on are pinned to the materialized engine up
+to N=4096, and the opt-in cluster-mean approximation must honor the
+error bound it reports.
+
+Satellites covered here: the Federation plan-build memo (hits on
+repeated (mask, parity) keys, invalidated by regroup/resize),
+placement-aware virtual-slot packing (``cluster_permutation`` with
+capacity/align), link-drift re-clustering with the probe path's
+rate-limit contract, and placement carry-over across adaptive-M dims
+proposals."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.adaptive import carry_placement
+from repro.core.federation import Federation, FederationConfig
+from repro.core.moshpit import GridPlan, plan_grid
+from repro.core.placement import (ClusteredPlacement,
+                                  LinkQualityEstimator,
+                                  cluster_permutation)
+from repro.core.transport import build_array_plan, build_super_plan
+from repro.core.aggregation import TECHNIQUES, make_aggregator
+from repro.runtime.network import build_link_model
+from repro.runtime.super_network import (SuperNetworkSim,
+                                         approx_link_arrays)
+from repro.runtime.transport_base import TRANSPORTS, build_transport
+from repro.runtime.vector_network import (VectorNetworkSim,
+                                          group_broadcast_seconds,
+                                          group_gather_seconds,
+                                          mar_group_seconds)
+
+from test_vector_network import MB, _assert_equal_transcripts
+
+STRUCTURED = sorted(set(TECHNIQUES))
+
+
+def _run_pair(tech, n, mask=None, profile="wireless", seed=0,
+              link_params=None, compute_s=None, iters=1, **super_kw):
+    """(vector, super) transcript pairs on identical links + plans."""
+    plan = plan_grid(n)
+    agg = make_aggregator(tech, plan)
+    aplan = build_array_plan(tech, plan, mask, MB,
+                             num_rounds=agg.num_rounds)
+    splan = build_super_plan(tech, plan, mask, MB,
+                             num_rounds=agg.num_rounds)
+    vec = VectorNetworkSim(n, profile=profile, seed=seed,
+                           link_params=link_params)
+    sup = SuperNetworkSim(n, profile=profile, seed=seed,
+                          link_params=link_params, **super_kw)
+    return [(vec.run(aplan, compute_s=compute_s),
+             sup.run(splan, compute_s=compute_s))
+            for _ in range(iters)]
+
+
+# ---------------------------------------------------------------------------
+# tentpole: transcript parity with the vector engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tech", STRUCTURED)
+@pytest.mark.parametrize("n", (64, 125))
+@pytest.mark.parametrize("profile", ("uniform", "wireless"))
+def test_super_parity_full_participation(tech, n, profile):
+    for tv, ts in _run_pair(tech, n, profile=profile, iters=2):
+        _assert_equal_transcripts(tv, ts)
+
+
+@pytest.mark.parametrize("tech", ("mar", "gossip", "hierarchical"))
+def test_super_parity_n1024(tech):
+    for tv, ts in _run_pair(tech, 1024):
+        _assert_equal_transcripts(tv, ts)
+
+
+@pytest.mark.parametrize("tech", STRUCTURED)
+def test_super_parity_under_churn(tech):
+    rng = np.random.default_rng(5)
+    mask = (rng.random(64) > 0.3).astype(np.float32)
+    mask[:2] = 1.0
+    for tv, ts in _run_pair(tech, 64, mask=mask):
+        _assert_equal_transcripts(tv, ts)
+
+
+def test_super_parity_compute_skew():
+    skew = np.random.default_rng(9).uniform(0.0, 3.0, 64)
+    for tv, ts in _run_pair("mar", 64, compute_s=skew):
+        _assert_equal_transcripts(tv, ts)
+
+
+def test_super_parity_seeded_loss_delegates():
+    """Lossy profiles route the whole plan through the internal vector
+    engine with a synced RNG stream — loss draws, drops and demotion
+    land on identical messages across iterations."""
+    lp = {"loss": 0.05}
+    for tv, ts in _run_pair("mar", 64, link_params=lp, iters=3):
+        _assert_equal_transcripts(tv, ts)
+
+
+def test_super_parity_mkd_prefix():
+    plan = plan_grid(27)
+    agg = make_aggregator("mar", plan)
+    aplan = build_array_plan("mar", plan, None, MB,
+                             num_rounds=agg.num_rounds)
+    from repro.core.transport import with_mkd_traffic_arrays
+    aplan = with_mkd_traffic_arrays(aplan, plan, None, MB, 64.0,
+                                    num_rounds=agg.num_rounds)
+    splan = build_super_plan("mar", plan, None, MB,
+                             num_rounds=agg.num_rounds, use_kd=True,
+                             raw_model_bytes=MB, kd_logit_bytes=64.0)
+    tv = VectorNetworkSim(27, profile="wireless", seed=1).run(aplan)
+    ts = SuperNetworkSim(27, profile="wireless", seed=1).run(splan)
+    _assert_equal_transcripts(tv, ts)
+    assert ts.kd_bytes > 0
+
+
+def test_slot_fast_path_parity():
+    """Forcing the aggregated accounting mode (``link_budget=0``) at an
+    all-binary grid takes the contiguous slot-order path — per-round
+    times, finish vector and per-peer seconds must still equal the
+    vector engine's, with and without a placement permutation."""
+    n = 2048
+    plan = plan_grid(n)
+    perm = np.random.default_rng(3).permutation(n)
+    for p in (plan, plan.with_placement(perm)):
+        agg = make_aggregator("mar", p)
+        aplan = build_array_plan("mar", p, None, MB,
+                                 num_rounds=agg.num_rounds)
+        splan = build_super_plan("mar", p, None, MB,
+                                 num_rounds=agg.num_rounds)
+        tv = VectorNetworkSim(n, profile="wireless", seed=2).run(aplan)
+        ts = SuperNetworkSim(n, profile="wireless", seed=2,
+                             link_budget=0).run(splan)
+        assert ts.total_bytes == tv.total_bytes
+        assert ts.round_s == tv.round_s
+        assert np.array_equal(ts.peer_finish_s, tv.peer_finish_s)
+        assert np.array_equal(np.asarray(ts.tx_seconds_by_peer),
+                              np.asarray(tv.tx_seconds_by_peer))
+        assert np.array_equal(np.asarray(ts.rx_seconds_by_peer),
+                              np.asarray(tv.rx_seconds_by_peer))
+
+
+def test_small_fleets_keep_link_detail():
+    """The message budget only demotes *large* fleets to aggregated
+    accounting — at parity-tier N the per-link dict stays populated
+    even with a zero budget, so placement estimators keep their
+    evidence stream."""
+    n = 64
+    plan = plan_grid(n)
+    splan = build_super_plan("rdfl", plan, None, MB)
+    ts = SuperNetworkSim(n, profile="wireless", seed=0,
+                         link_budget=0).run(splan)
+    aplan = build_array_plan("rdfl", plan, None, MB)
+    tv = VectorNetworkSim(n, profile="wireless", seed=0).run(aplan)
+    assert ts.bytes_by_link == tv.bytes_by_link
+    assert len(ts.bytes_by_link) > 0
+
+
+def test_super_sim_registered_and_negotiates_plan_format():
+    assert "super_sim" in TRANSPORTS
+    sim = build_transport("super_sim", 16, profile="uniform", seed=0)
+    assert isinstance(sim, SuperNetworkSim)
+    assert sim.plan_format == "super"
+    assert VectorNetworkSim.plan_format == "array"
+
+
+def test_super_accepts_foreign_plans():
+    """Non-symbolic plans (list or array form) delegate — the backend
+    is still a drop-in for callers that built the wrong plan type."""
+    plan = plan_grid(27)
+    agg = make_aggregator("mar", plan)
+    mplan = agg.message_plan(None, MB)
+    tv = VectorNetworkSim(27, profile="wireless", seed=4).run(
+        build_array_plan("mar", plan, None, MB,
+                         num_rounds=agg.num_rounds))
+    ts = SuperNetworkSim(27, profile="wireless", seed=4).run(mplan)
+    _assert_equal_transcripts(tv, ts)
+
+
+# ---------------------------------------------------------------------------
+# closed-form recurrences: pinned to the materialized engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", (64, 729, 4096))
+def test_mar_closed_form_matches_materialized(n):
+    plan = plan_grid(n)
+    links = build_link_model("wireless", n, seed=7)
+    it_s, finish = mar_group_seconds(links, plan, MB)
+    aplan = build_array_plan("mar", plan, None, MB)
+    tr = VectorNetworkSim(n, links=links).run(aplan)
+    assert it_s == tr.iteration_s
+    assert np.array_equal(finish, tr.peer_finish_s)
+
+
+def test_group_gather_broadcast_roundtrip():
+    """gather then broadcast over leaf groups: every member's finish
+    time is at least the leader's gather finish (causality), and on a
+    uniform profile all *receiving* members of a group finish together
+    (the leader sends, it doesn't receive — its clock stays at the
+    gather finish)."""
+    n = 64
+    plan = plan_grid(n)
+    links = build_link_model("uniform", n, seed=0)
+    _, after_gather = group_gather_seconds(links, plan, MB)
+    # feed the gather finishes in as compute offsets for the broadcast
+    it_s, after_bcast = group_broadcast_seconds(
+        links, plan, MB, compute_s=after_gather)
+    assert np.all(after_bcast >= after_gather - 1e-12)
+    m = plan.dims[-1]
+    groups = after_bcast.reshape(-1, m)
+    assert np.allclose(groups[:, 1:], groups[:, 1:2])
+    assert np.all(groups[:, 0] <= groups[:, 1] + 1e-12)
+    assert it_s == float(after_bcast.max())
+
+
+@pytest.mark.parametrize("fn", (mar_group_seconds,
+                                group_gather_seconds,
+                                group_broadcast_seconds))
+def test_closed_forms_monotone_in_bytes(fn):
+    plan = plan_grid(27)
+    links = build_link_model("wireless", 27, seed=3)
+    prev = -1.0
+    for b in (1e3, 1e5, 1e7, 1e9):
+        it_s, finish = fn(links, plan, b)
+        assert it_s > prev
+        assert np.all(finish >= 0.0)
+        prev = it_s
+
+
+def test_approx_honors_reported_error_bound():
+    """Cluster-mean link approximation: every round time must land
+    within (1 ± delta) of the exact engine's, delta being the bound
+    ``approx_link_arrays`` itself reports."""
+    n = 64
+    plan = plan_grid(n)
+    links = build_link_model("wireless", n, seed=11)
+    level = plan.depth - 1                      # leaf-pair clusters
+    *_, delta = approx_link_arrays(links, plan, level)
+    assert 0.0 < delta < 1.0
+    agg = make_aggregator("mar", plan)
+    exact = VectorNetworkSim(n, links=links).run(
+        build_array_plan("mar", plan, None, MB,
+                         num_rounds=agg.num_rounds))
+    approx = SuperNetworkSim(n, links=links, approx_level=level).run(
+        build_super_plan("mar", plan, None, MB,
+                         num_rounds=agg.num_rounds))
+    assert approx.total_bytes == exact.total_bytes    # bytes stay exact
+    for a, e in zip(approx.round_s, exact.round_s):
+        assert e * (1 - delta) - 1e-12 <= a <= e * (1 + delta) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# satellite: Federation plan-build memo
+# ---------------------------------------------------------------------------
+
+def _fed(transport, **kw):
+    cfg = FederationConfig(n_peers=8, technique="mar", task="text",
+                           link_profile="wireless",
+                           transport=transport, seed=3, **kw)
+    return Federation(cfg)
+
+
+def test_federation_super_transport_matches_heap_and_vector():
+    outs = {}
+    for backend in ("sim", "vector_sim", "super_sim"):
+        fed = _fed(backend)
+        state = fed.init_state()
+        for _ in range(2):
+            state = fed.step(state)
+        outs[backend] = (fed.comm_bytes, fed.sim_seconds,
+                         fed.last_transcript.n_messages)
+    assert outs["super_sim"] == outs["sim"]
+    assert outs["vector_sim"] == outs["sim"]
+
+
+def test_plan_cache_hits_on_stable_membership():
+    """Full participation repeats the (mask bytes, iteration parity)
+    key every other step — by step 3 the planner must stop paying the
+    build cost."""
+    fed = _fed("super_sim")
+    state = fed.init_state()
+    for _ in range(4):
+        state = fed.step(state)
+    assert fed.plan_cache_misses <= 2      # one per iteration parity
+    assert fed.plan_cache_hits >= 2
+
+
+def test_plan_cache_invalidated_on_regroup_and_resize():
+    fed = _fed("super_sim")
+    state = fed.init_state()
+    state = fed.step(state)
+    assert len(fed._plan_cache) > 0
+    state = fed.regroup(state, GridPlan(8, (4, 2)))
+    assert len(fed._plan_cache) == 0
+    state = fed.step(state)
+    assert len(fed._plan_cache) > 0
+    fed.resize(state, 12)
+    assert len(fed._plan_cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: placement-aware virtual-slot packing
+# ---------------------------------------------------------------------------
+
+def test_cluster_permutation_historical_default_bit_exact():
+    """capacity=None is the pre-existing peer-only packing: largest
+    cluster first, members in index order — pinned element by
+    element."""
+    labels = np.array([1, 1, 0, 0, 0, 2, 2, 0])
+    perm = cluster_permutation(labels)
+    # cluster 0 (4 members) -> slots 0..3, cluster 1 -> 4..5, 2 -> 6..7
+    assert perm.tolist() == [4, 5, 0, 1, 2, 6, 7, 3]
+
+
+def test_cluster_permutation_packs_virtuals_at_boundaries():
+    """With capacity + align, each short cluster absorbs virtual
+    entities up to its own sub-block boundary instead of pulling the
+    next cluster across it."""
+    labels = np.array([0, 0, 0, 1, 1])          # sizes 3 and 2
+    perm = cluster_permutation(labels, capacity=8, align=4)
+    assert perm.size == 8
+    # cluster 0 -> slots 0..2, virtual 5 pads slot 3; cluster 1 ->
+    # slots 4..5, virtuals 6, 7 pad the tail
+    assert perm.tolist() == [0, 1, 2, 4, 5, 3, 6, 7]
+    # every slot covered exactly once
+    assert sorted(perm.tolist()) == list(range(8))
+
+
+def test_cluster_permutation_capacity_validates():
+    with pytest.raises(ValueError):
+        cluster_permutation(np.zeros(8, np.int64), capacity=4)
+
+
+def test_clustered_proposals_cover_full_capacity():
+    """On a non-exact grid the policy's proposal assigns every virtual
+    slot explicitly (placement length == capacity) and keeps each
+    cluster contiguous among real peers."""
+    n = 6
+    plan = GridPlan(n, (2, 2, 2))               # capacity 8: 2 virtuals
+    assert plan.capacity > n
+    policy = ClusteredPlacement(plan, seed=0, min_coverage=0.0)
+    policy.labels = np.array([0, 1, 0, 1, 0, 1])
+    policy._last_cluster_t = 0
+    target = policy.observe(1, None, plan)
+    assert target is not None
+    assert len(target.placement) == plan.capacity
+    assert sorted(target.placement) == list(range(plan.capacity))
+
+
+# ---------------------------------------------------------------------------
+# satellite: link-drift re-clustering (rate-limited)
+# ---------------------------------------------------------------------------
+
+def _full_evidence_transcript(n, rate, nbytes=1e6):
+    """Synthetic all-pairs transcript with per-link seconds-per-byte
+    ``rate[s, d]`` — enough coverage that no probe round is needed."""
+    stats, links = {}, {}
+    for s in range(n):
+        for d in range(n):
+            if s != d:
+                stats[(s, d)] = rate[s, d] * nbytes
+                links[(s, d)] = nbytes
+    return SimpleNamespace(link_time_stats=stats, bytes_by_link=links,
+                           peer_finish_s=np.zeros(n))
+
+
+def _two_tier_rates(n, scale=1.0):
+    rate = np.full((n, n), 1e-4 * scale)
+    rate[:n // 2, :n // 2] = 1e-6 * scale
+    rate[n // 2:, n // 2:] = 1e-6 * scale
+    return rate
+
+
+def test_drift_statistic_and_mark():
+    est = LinkQualityEstimator(4)
+    est.update(_full_evidence_transcript(4, np.full((4, 4), 1e-5)))
+    assert est.drift() == 0.0                   # no baseline yet
+    est.mark()
+    assert est.drift() == pytest.approx(0.0)
+    est.update(_full_evidence_transcript(4, np.full((4, 4), 3e-5)))
+    # accumulated rate doubles: (1 + 3) / 2 bytes-weighted
+    assert est.drift() == pytest.approx(1.0)
+    est.mark()
+    assert est.drift() == pytest.approx(0.0)
+
+
+def test_drift_triggers_early_recluster():
+    n = 8
+    plan = plan_grid(n)
+    policy = ClusteredPlacement(plan, seed=0, interval=16,
+                                drift_threshold=0.5,
+                                drift_min_interval=2)
+    policy.observe(0, _full_evidence_transcript(n, _two_tier_rates(n)),
+                   plan)
+    assert policy._last_cluster_t == 0
+    # link quality shifts 10x: drift >> threshold, but inside the
+    # rate-limit window nothing may fire (probe contract mirrored)
+    drifted = _full_evidence_transcript(n, _two_tier_rates(n, 10.0))
+    policy.observe(1, drifted, plan)
+    assert policy._last_cluster_t == 0          # rate-limited
+    policy.observe(2, drifted, plan)
+    assert policy._last_cluster_t == 2          # early re-cluster
+    # the re-cluster re-marked the baseline: same evidence again stays
+    # quiet until the scheduled interval
+    policy.observe(4, drifted, plan)
+    assert policy._last_cluster_t == 2
+
+
+def test_no_drift_no_early_recluster():
+    n = 8
+    plan = plan_grid(n)
+    policy = ClusteredPlacement(plan, seed=0, interval=16,
+                                drift_threshold=0.5,
+                                drift_min_interval=2)
+    tr = _full_evidence_transcript(n, _two_tier_rates(n))
+    policy.observe(0, tr, plan)
+    for t in (2, 5, 9):
+        policy.observe(t, tr, plan)
+        assert policy._last_cluster_t == 0      # steady links: cadence
+
+
+# ---------------------------------------------------------------------------
+# satellite: placement carry-over across dims proposals
+# ---------------------------------------------------------------------------
+
+def test_carry_placement_preserves_slot_order():
+    old = plan_grid(8).with_placement(
+        np.array([3, 1, 0, 2, 7, 5, 4, 6]))
+    new = carry_placement(old, GridPlan(8, (4, 2)))
+    assert new.placement is not None
+    # peers keep their relative slot order across the dims change
+    old_order = np.argsort(old.slot_of(np.arange(8)))
+    new_order = np.argsort(new.slot_of(np.arange(8)))
+    assert np.array_equal(old_order, new_order)
+
+
+def test_carry_placement_identity_and_explicit_passthrough():
+    old = plan_grid(8)                          # identity placement
+    new = GridPlan(8, (4, 2))
+    assert carry_placement(old, new) is new
+    placed = GridPlan(8, (4, 2)).with_placement(
+        np.random.default_rng(0).permutation(8))
+    # a proposal that already carries a placement wins
+    assert carry_placement(plan_grid(8).with_placement(
+        np.array([1, 0, 2, 3, 4, 5, 6, 7])), placed) is placed
