@@ -17,6 +17,13 @@ links, the socket backend's from actual loopback transmission of real
 int8-serialized tensors, and the ratio between them is the calibration
 signal (EXPERIMENTS.md §Sim-vs-real calibration).
 
+A second section runs the *multi-process* socket path: the same plans
+over a two-rank address-book world (``run_multiprocess`` — real spawn
+processes, fixed host:port endpoints, cross-rank TCP), with the merged
+per-rank transcripts gated byte-exact against the simulator too. That
+is the "beyond loopback" claim: the address-book deployment moves
+exactly the bytes the model says it does.
+
 Exit status is non-zero on any byte mismatch, so CI can gate on it.
 """
 from __future__ import annotations
@@ -27,7 +34,8 @@ from benchmarks.common import emit, std_argparser
 from repro.core import topology
 from repro.core.aggregation import TECHNIQUES, build_pipeline
 from repro.core.moshpit import plan_grid
-from repro.runtime.socket_transport import encode_state_payloads
+from repro.runtime.socket_transport import (encode_state_payloads,
+                                            run_multiprocess)
 from repro.runtime.transport_base import build_transport
 
 ORDER = ("fedavg", "hierarchical", "mar", "gossip", "rdfl", "ar")
@@ -110,6 +118,32 @@ def main(argv=None) -> int:
                  "mar", n, model_bytes, plan) / 4),
              sim_s=round(tr_sim.iteration_s, 6),
              wall_s=round(tr_sock.iteration_s, 6))
+
+    # beyond loopback: the same plans over a two-rank address-book
+    # world (real spawned processes, fixed ports, cross-rank TCP);
+    # merged per-rank transcripts must match the simulator byte-exact
+    mp_techs = ("mar", "ar", "fedavg")
+    for n in peer_counts:
+        plan = plan_grid(n)
+        mask = np.ones(n, np.float32)
+        plans = [build_pipeline(t, plan).message_plan(mask, model_bytes,
+                                                      n)
+                 for t in mp_techs]
+        merged = run_multiprocess(n, plans, world_size=2,
+                                  seed=args.seed)
+        sim = build_transport("sim", n, profile="uniform",
+                              seed=args.seed)
+        for tech, mplan, tr_mp in zip(mp_techs, plans, merged):
+            tr_sim = sim.run(mplan)
+            exact = (tr_mp.total_bytes == tr_sim.total_bytes
+                     and tr_mp.bytes_by_round == tr_sim.bytes_by_round
+                     and tr_mp.bytes_by_link == tr_sim.bytes_by_link)
+            failures += not exact
+            emit("transport_calibration", technique=tech + "+2proc",
+                 n_peers=n, messages=mplan.n_messages,
+                 bytes_sim=int(tr_sim.total_bytes),
+                 bytes_socket=int(tr_mp.total_bytes), byte_exact=exact,
+                 wall_s=round(tr_mp.iteration_s, 6))
 
     emit("transport_calibration", summary=True,
          peer_counts=str(peer_counts), byte_mismatches=failures)

@@ -158,7 +158,15 @@ class Checkpointer:
                 like: Optional[PyTree] = None
                 ) -> Tuple[PyTree, Dict[str, Any]]:
         """Returns (tree, metadata). With ``like`` given, leaves adopt its
-        structure/dtypes; otherwise a nested-dict tree keyed by path."""
+        structure/dtypes; otherwise a nested-dict tree keyed by path.
+
+        When the checkpoint was saved at a different peer count than
+        ``like`` carries (the manifest records ``n_peers``), peer-
+        stacked leaves are remapped through the membership contract's
+        :func:`~repro.core.replan.resize_peer_axis` — survivors'
+        slices bit-exact, joiners from the group mean — instead of
+        failing the shape mismatch at unflatten time.
+        """
         self.wait()
         step = self.latest_step() if step is None else step
         if step is None:
@@ -172,11 +180,27 @@ class Checkpointer:
             return _from_savable(blobs[key], manifest["dtypes"][key])
 
         if like is not None:
+            from repro.core.replan import resize_peer_axis
+            old_n = manifest["metadata"].get("n_peers")
             flat, _ = jax.tree_util.tree_flatten_with_path(like)
-            leaves = []
+            leaves, remapped = [], 0
             for p, leaf in flat:
                 key = _SEP.join(_path_str(e) for e in p)
-                leaves.append(jnp.asarray(load(key), leaf.dtype))
+                arr = load(key)
+                if (old_n is not None and arr.ndim >= 1
+                        and hasattr(leaf, "ndim") and leaf.ndim >= 1
+                        and arr.shape[0] == old_n
+                        and leaf.shape[0] != old_n
+                        and arr.shape[1:] == leaf.shape[1:]):
+                    arr = resize_peer_axis(jnp.asarray(arr), old_n,
+                                           leaf.shape[0])
+                    remapped += 1
+                leaves.append(jnp.asarray(arr, leaf.dtype))
+            if remapped:
+                print(f"[checkpoint] step {step}: remapped {remapped} "
+                      f"peer-stacked leaves from {old_n} saved peers "
+                      f"to the requested axis (survivors exact, "
+                      f"joiners group-mean)")
             tree = jax.tree.unflatten(jax.tree.structure(like), leaves)
         else:
             tree = {}

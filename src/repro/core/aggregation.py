@@ -56,6 +56,11 @@ import numpy as np
 
 from repro.core import topology
 from repro.core.moshpit import GridPlan
+# the elastic-membership primitives live in core/replan.py (the
+# MembershipChange contract, DESIGN.md §16); re-exported here for the
+# historical import path
+from repro.core.replan import resize_peer_axis  # noqa: F401
+from repro.core.replan import resize_state_tree
 
 Array = jax.Array
 PyTree = Any
@@ -84,39 +89,6 @@ def finalize_masked_mean(num: Array, den: Array, own: Array,
     mean = num / jnp.maximum(den, floor)
     empty = (den == 0.0).astype(jnp.float32)
     return mean * (1.0 - empty) + own.astype(jnp.float32) * empty
-
-
-def resize_peer_axis(tree: PyTree, old_n: int, new_n: int,
-                     fill: str = "mean") -> PyTree:
-    """Grow/shrink the stacked peer axis of a pytree *in place* (no
-    checkpoint round-trip) — the elastic-membership primitive.
-
-    Leaves whose leading dim is ``old_n`` are resized; everything else
-    (scalars, shared state) passes through. Shrinking slices the first
-    ``new_n`` peers (each already holds a near-global average — MAR's
-    mixing makes any subset representative, same rule as
-    ``Checkpointer.restore_elastic``); survivors are bit-exact.
-    Growing appends peers bootstrapped from the current group mean
-    (``fill="mean"``) or zeros (``fill="zero"`` — for error-feedback
-    residuals and indicator state that must start empty).
-    """
-    if old_n == new_n:
-        return tree
-
-    def leaf(x):
-        if x.ndim == 0 or x.shape[0] != old_n:
-            return x
-        if new_n < old_n:
-            return x[:new_n]
-        if fill == "zero":
-            pad = jnp.zeros((new_n - old_n,) + x.shape[1:], x.dtype)
-        else:
-            mean = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
-            pad = jnp.broadcast_to(
-                mean.astype(x.dtype), (new_n - old_n,) + x.shape[1:])
-        return jnp.concatenate([x, pad], axis=0)
-
-    return jax.tree.map(leaf, tree)
 
 
 # ---------------------------------------------------------------------------
@@ -365,8 +337,8 @@ class WireStage:
     def resize_state(self, own: PyTree, old_n: int, new_n: int) -> PyTree:
         """Elastic membership: remap this stage's state to a new peer
         count (mean-bootstrap by default; stages whose state must start
-        empty for new peers override)."""
-        return resize_peer_axis(own, old_n, new_n, fill="mean")
+        empty for new peers name those keys)."""
+        return resize_state_tree(own, old_n, new_n)
 
     def with_plan(self, new_plan: GridPlan) -> "WireStage":
         """Same stage bound to a new grid (adaptive-M regroup). Most
@@ -417,8 +389,7 @@ class Int8EFStage(WireStage):
     def resize_state(self, own, old_n, new_n):
         # a grown peer anchors at the mean reference but must not
         # inherit another peer's quantization residual
-        return {"ref": resize_peer_axis(own["ref"], old_n, new_n, "mean"),
-                "err": resize_peer_axis(own["err"], old_n, new_n, "zero")}
+        return resize_state_tree(own, old_n, new_n, zero_keys=("err",))
 
 
 @register_stage
@@ -462,11 +433,8 @@ class DPStage(WireStage):
 
     def resize_state(self, own, old_n, new_n):
         # has_delta is a bot marker: a new peer has no smoothed delta yet
-        out = {k: resize_peer_axis(v, old_n, new_n, "mean")
-               for k, v in own.items() if k != "has_delta"}
-        out["has_delta"] = resize_peer_axis(own["has_delta"], old_n,
-                                            new_n, "zero")
-        return out
+        return resize_state_tree(own, old_n, new_n,
+                                 zero_keys=("has_delta",))
 
     def with_plan(self, new_plan):
         # secagg pairwise masks pair within MAR groups — re-bind the grid

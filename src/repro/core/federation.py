@@ -25,10 +25,12 @@ dropouts joins aggregation; non-participants carry state forward
 ``cfg.churn`` picks the availability process (i.i.d. Bernoulli is the
 degenerate default, replaying the legacy ``sample_masks`` bit-exact),
 and permanent join/leave — from ``cfg.resize_schedule`` or trace
-events — triggers :meth:`Federation.resize`: the MAR grid is
-re-factorized (``elastic_replan``), the aggregation pipeline rebuilt,
-and the stacked peer axis of params/momentum/pipe state grown or
-shrunk in place, mid-run, with no checkpoint/restart.
+events — becomes a :class:`~repro.core.replan.MembershipChange`
+through :meth:`Federation.apply_membership` (the one membership entry
+point, DESIGN.md §16): the MAR grid is re-factorized
+(``elastic_replan``), the aggregation pipeline rebuilt, and the
+stacked peer axis of params/momentum/pipe state grown or shrunk in
+place, mid-run, with no checkpoint/restart.
 
 One FL iteration is a single jitted function of (state, masks, rng);
 the loop is host-side so benchmarks can interleave evaluation and
@@ -46,9 +48,10 @@ import numpy as np
 
 from repro.core import topology
 from repro.core.aggregation import (TECHNIQUES, AggregationPipeline,
-                                    CommLedger, build_pipeline,
-                                    resize_peer_axis)
+                                    CommLedger, build_pipeline)
 from repro.core.moshpit import GridPlan, plan_grid
+from repro.core.replan import (MembershipChange, plan_membership_change,
+                               regroup_change)
 from repro.data.partition import dirichlet_partition, iid_partition
 from repro.data.synthetic import classification_task
 from repro.models.small import build_peer_model
@@ -360,36 +363,64 @@ class Federation:
     # ------------------------------------------------------------------
     # elastic membership (mid-run, no checkpoint/restart)
     # ------------------------------------------------------------------
-    def resize(self, state: FederationState,
-               new_n: int) -> FederationState:
-        """Permanent join/leave: re-factorize the MAR grid
-        (``elastic_replan``), rebuild the aggregation pipeline, and
-        grow/shrink the stacked peer axis of params/momentum/pipe state
-        in place. Surviving peers' state is untouched (bit-exact);
-        joining peers bootstrap from the group mean, with stage-specific
-        rules for wire state (EF residuals start at zero, DP bot
-        markers reset). Returns the resized state; the federation's
-        plan/pipeline/data/jit are swapped underneath.
-        """
-        from repro.runtime.fault import elastic_replan
-        old_n = self.cfg.n_peers
-        if new_n == old_n:
-            return state
-        if new_n < 1:
-            raise ValueError(f"cannot resize to {new_n} peers")
-        new_plan = elastic_replan(self.plan, new_n)
+    def apply_membership(self, state: FederationState,
+                         change: MembershipChange) -> FederationState:
+        """THE membership entry point (DESIGN.md §16): every layer's
+        reaction to one :class:`~repro.core.replan.MembershipChange` —
+        lifecycle resizes, adaptive-M regroups and placement
+        permutations all arrive here as the same event.
 
-        params = resize_peer_axis(state.params, old_n, new_n, "mean")
-        momentum = resize_peer_axis(state.momentum, old_n, new_n, "mean")
-        pipe = self.pipeline.resize_state(state.pipe, old_n, new_n)
+        Same-N change (regroup): the grid dims/placement swap, the
+        pipeline re-binds (:meth:`AggregationPipeline.with_plan`), peer
+        state is untouched. Different-N change (permanent join/leave):
+        survivors' params/momentum/pipe state map through the change
+        bit-exact, joiners bootstrap from the group mean (per-stage
+        zero rules for wire state), the data shards follow the survivor
+        map, and the lifecycle, transport links, controller and
+        placement policy all re-bind to ``change.new_plan``. Either
+        way the plan cache and jit trace are refreshed.
+        """
+        if change.old_n != self.cfg.n_peers:
+            raise ValueError(
+                f"change was planned for {change.old_n} peers, fleet "
+                f"has {self.cfg.n_peers}")
+        if change.same_n:
+            # membership-preserving regroup (adaptive-M / placement)
+            from repro.core.adaptive import validate_proposal
+            n = self.cfg.n_peers
+            validate_proposal(change.new_plan, n)
+            # full-plan equality: a placement-only change (same dims,
+            # new peer->slot permutation) is a real regroup too
+            if change.new_plan == self.plan:
+                return state
+            self.plan = change.new_plan
+            self._plan_cache.clear()
+            self.pipeline = self.pipeline.with_plan(change.new_plan)
+            pipe = self.pipeline.resize_state(state.pipe, n, n)
+            self._it_fn = jax.jit(self._iteration,
+                                  static_argnames=("use_kd",
+                                                   "do_aggregate"))
+            return dataclasses.replace(state, pipe=pipe)
+
+        old_n, new_n = change.old_n, change.new_n
+        k = len(change.survivors)
+        params = change.apply_to_tree(state.params)
+        momentum = change.apply_to_tree(state.momentum)
+        # pipe state: survivor gather is a pure reindex; the joiner
+        # bootstrap routes through the per-stage hooks (EF residuals
+        # start at zero, DP bot markers reset)
+        from repro.core.replan import select_survivors
+        pipe = select_survivors(state.pipe, old_n, change.survivors)
+        pipe = self.pipeline.resize_state(pipe, k, new_n)
 
         # per-peer data: survivors keep their shard; joiners draw theirs
         # from a new_n-way partition of the same training set
-        if new_n < old_n:
-            self.data_x = self.data_x[:new_n]
-            self.data_y = self.data_y[:new_n]
-        else:
-            xs, ys = self._peer_shards(range(old_n, new_n), new_n,
+        self.data_x = select_survivors(self.data_x, old_n,
+                                       change.survivors)
+        self.data_y = select_survivors(self.data_y, old_n,
+                                       change.survivors)
+        if new_n > k:
+            xs, ys = self._peer_shards(range(k, new_n), new_n,
                                        per_peer=self.data_x.shape[1])
             self.data_x = jnp.concatenate(
                 [self.data_x, jnp.asarray(np.stack(xs))], axis=0)
@@ -397,25 +428,39 @@ class Federation:
                 [self.data_y, jnp.asarray(np.stack(ys))], axis=0)
 
         self.cfg = dataclasses.replace(self.cfg, n_peers=new_n)
-        self.plan = new_plan
+        self.plan = change.new_plan
         self._plan_cache.clear()
-        self.pipeline = self._build_pipeline(self.cfg, new_plan)
+        self.pipeline = self._build_pipeline(self.cfg, change.new_plan)
         if self.lifecycle.n_peers != new_n:
             self.lifecycle.resize(new_n)
-        # survivors keep their modeled links; joiners draw fresh ones
+        # survivors keep their modeled links (or, in address-book mode,
+        # their fixed endpoints); joiners draw/bind fresh ones
         self.network.resize(new_n)
         if self.controller is not None:
             # new fleet, new candidate ladder — the controller re-anchors
-            self.controller.rebind(new_plan)
+            self.controller.rebind(change.new_plan)
         if self.placement_policy is not None:
             # stale link evidence and permutation sizes are dropped; the
             # policy re-learns/re-emits for the new fleet
-            self.placement_policy.rebind(new_plan)
+            self.placement_policy.rebind(change.new_plan)
         # fresh jit cache: the old traces closed over the old data arrays
         self._it_fn = jax.jit(self._iteration,
                               static_argnames=("use_kd", "do_aggregate"))
         return dataclasses.replace(state, params=params,
                                    momentum=momentum, pipe=pipe)
+
+    def resize(self, state: FederationState,
+               new_n: int) -> FederationState:
+        """Permanent join/leave — thin wrapper: plans the
+        :class:`MembershipChange` (``elastic_replan`` grid, contiguous
+        survivor prefix) and routes it through
+        :meth:`apply_membership`. Surviving peers' state is untouched
+        (bit-exact); joining peers bootstrap from the group mean."""
+        if new_n == self.cfg.n_peers:
+            return state
+        return self.apply_membership(
+            state, plan_membership_change(self.plan, new_n,
+                                          iteration=state.iteration))
 
     # ------------------------------------------------------------------
     # placement probes (core/placement.py)
@@ -436,32 +481,17 @@ class Federation:
     def regroup(self, state: FederationState,
                 new_plan: GridPlan) -> FederationState:
         """Swap the MAR grid dims mid-run *without* touching membership
-        — the adaptive-M hook (``core/adaptive.py``).
-
-        Reuses the elastic machinery with ``old_n == new_n``: the
-        aggregation pipeline is rebuilt for the new dims
-        (:meth:`AggregationPipeline.with_plan` — the aggregator's grid
-        and any plan-holding stage re-bind, configuration preserved)
-        and the per-``WireStage`` state maps through ``resize_state``,
-        which at equal peer counts is the identity — peer state, data
-        shards, links, and lifecycle are untouched and survivor state
-        is bit-exact. Only the jit cache is refreshed (the old trace
+        — the adaptive-M hook (``core/adaptive.py``). Thin wrapper: a
+        same-N :class:`MembershipChange` through
+        :meth:`apply_membership` — the aggregation pipeline re-binds
+        (:meth:`AggregationPipeline.with_plan`), peer state / data
+        shards / links / lifecycle are untouched and survivor state is
+        bit-exact; only the jit cache is refreshed (the old trace
         closed over the old pipeline).
         """
-        from repro.core.adaptive import validate_proposal
-        n = self.cfg.n_peers
-        validate_proposal(new_plan, n)
-        # full-plan equality: a placement-only change (same dims, new
-        # peer->slot permutation) is a real regroup too
-        if new_plan == self.plan:
-            return state
-        self.plan = new_plan
-        self._plan_cache.clear()
-        self.pipeline = self.pipeline.with_plan(new_plan)
-        pipe = self.pipeline.resize_state(state.pipe, n, n)
-        self._it_fn = jax.jit(self._iteration,
-                              static_argnames=("use_kd", "do_aggregate"))
-        return dataclasses.replace(state, pipe=pipe)
+        return self.apply_membership(
+            state, regroup_change(self.plan, new_plan,
+                                  iteration=state.iteration))
 
     # ------------------------------------------------------------------
     # local update (vmapped Momentum-SGD over B minibatches)
@@ -562,9 +592,13 @@ class Federation:
         else:
             tick = self.lifecycle.tick(state.iteration)
             if tick.resize_to is not None:
-                # permanent join/leave: regroup in place, then run the
-                # iteration with the already-resized masks
-                state = self.resize(state, tick.resize_to)
+                # permanent join/leave: one MembershipChange through the
+                # unified entry point, then run the iteration with the
+                # already-resized masks
+                state = self.apply_membership(
+                    state, plan_membership_change(
+                        self.plan, tick.resize_to,
+                        iteration=state.iteration))
             u, a = tick.u, tick.a
         cfg = self.cfg
         rng, it_rng = jax.random.split(state.rng)
@@ -612,7 +646,9 @@ class Federation:
                 state.iteration, transcript, self.plan)
             if proposal is not None and proposal != self.plan:
                 old_dims = tuple(self.plan.dims)
-                out = self.regroup(out, proposal)
+                out = self.apply_membership(
+                    out, regroup_change(self.plan, proposal,
+                                        iteration=state.iteration))
                 self.regroup_log.append(
                     (state.iteration, old_dims, tuple(self.plan.dims)))
                 if self.placement_policy is not None:
@@ -624,7 +660,9 @@ class Federation:
                 state.iteration, transcript, self.plan)
             if target is not None and target != self.plan:
                 old = self.plan
-                out = self.regroup(out, target)
+                out = self.apply_membership(
+                    out, regroup_change(self.plan, target,
+                                        iteration=state.iteration))
                 moved = int(np.sum(
                     old.slot_of(np.arange(old.n_peers))
                     != self.plan.slot_of(np.arange(old.n_peers))))

@@ -34,9 +34,10 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import (AggregationPipeline, MarAggregator,
-                                    resize_peer_axis)
+from repro.core.aggregation import AggregationPipeline, MarAggregator
 from repro.core.moshpit import GridPlan
+from repro.core.replan import (MembershipChange, resize_peer_axis,
+                               select_survivors)
 from repro.models.model import Model
 from repro.optim.sgdm import momentum_sgd_step
 
@@ -88,6 +89,47 @@ def resize_fl_state(state: Dict[str, Any], new_n: int,
         else:
             out["pipe"] = resize_peer_axis(state["pipe"], old_n, new_n)
     return out
+
+
+def apply_membership(state: Dict[str, Any], change: MembershipChange,
+                     pipeline: Optional[AggregationPipeline] = None
+                     ) -> Tuple[Dict[str, Any],
+                                Optional[AggregationPipeline]]:
+    """The device backend's consumer of the unified membership contract
+    (DESIGN.md §16): apply one
+    :class:`~repro.core.replan.MembershipChange` to the FL state dict
+    and re-bind the pipeline to ``change.new_plan``.
+
+    Survivors' params/momentum/pipe state map through the change
+    bit-exact (the contiguous-prefix default is the historical slice);
+    joiners bootstrap from the group mean, with the per-``WireStage``
+    zero rules for wire state (EF residuals, DP bot markers). Returns
+    ``(state, pipeline)``; the caller re-jits the train step for the
+    new plan (``make_fl_train_step(model, change.new_plan, ...)``) —
+    the device aggregator needs an exact grid, so plan the change with
+    ``exact_only=True``.
+    """
+    old_n = jax.tree.leaves(state["params"])[0].shape[0]
+    if old_n != change.old_n:
+        raise ValueError(f"change was planned for {change.old_n} "
+                         f"peers, state has {old_n}")
+    new_pipeline = pipeline.with_plan(change.new_plan) \
+        if pipeline is not None else None
+    if change.same_n:
+        return dict(state), new_pipeline
+    k = len(change.survivors)
+    out = dict(state)
+    out["params"] = change.apply_to_tree(state["params"])
+    out["momentum"] = change.apply_to_tree(state["momentum"])
+    if "pipe" in state:
+        # survivor gather is a pure reindex; the joiner bootstrap
+        # routes through the per-stage hooks
+        pipe = select_survivors(state["pipe"], old_n, change.survivors)
+        if pipeline is not None:
+            out["pipe"] = pipeline.resize_state(pipe, k, change.new_n)
+        else:
+            out["pipe"] = resize_peer_axis(pipe, k, change.new_n)
+    return out, new_pipeline
 
 
 def fl_state_shape(model: Model, n_peers: int,

@@ -17,6 +17,19 @@ seconds come from the measured transcript, and lost sends
 (``--link-loss`` — modeled drops on sim, injected failures on socket)
 demote their peer to receiver-only for that step.
 
+Permanent membership changes are handled *in place* (DESIGN.md §16):
+scheduled resizes (``--resize-at``) and trace join/leave events route
+through the unified :class:`~repro.core.replan.MembershipChange`
+contract — survivors' state maps bit-exact, joiners bootstrap from the
+group mean, the train step re-jits for the new grid, and the run keeps
+going with no relaunch. The whole planned schedule is validated at
+launch (every target peer count must have an exact grid).
+
+Multi-host: ``--peer-hosts book.json --rank R`` runs this process as
+one rank of a socket-transport world — the JSON address book fixes
+``host:port`` per plan node and which rank owns it; start one process
+per rank with the same book (see README "Multi-host quickstart").
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
       --smoke --steps 20 --peers 4 --ckpt-dir /tmp/ck
@@ -26,6 +39,8 @@ Examples:
       --smoke --steps 10 --peers 4 --churn sessions
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
       --smoke --steps 3 --peers 4 --transport socket
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+      --smoke --steps 8 --peers 16 --resize-at 4:9
 """
 from __future__ import annotations
 
@@ -41,8 +56,11 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.core import topology
 from repro.core.aggregation import CommLedger, build_pipeline
-from repro.core.fl_device import init_fl_state, make_fl_train_step
+from repro.core.fl_device import (apply_membership, init_fl_state,
+                                  make_fl_train_step)
 from repro.core.moshpit import plan_grid
+from repro.core.replan import (plan_membership_change,
+                               validate_membership_schedule)
 from repro.data.synthetic import lm_token_stream
 from repro.models.model import Model
 from repro.runtime.fault import HealthTracker, StragglerPolicy
@@ -106,9 +124,15 @@ def main(argv=None) -> int:
     ap.add_argument("--health-timeout", type=float, default=30.0,
                     help="iterations without a heartbeat before a peer "
                          "is marked dead")
+    ap.add_argument("--resize-at", default=None, metavar="STEP:N[,..]",
+                    help="scheduled permanent resizes, e.g. '4:9' or "
+                         "'3:6,7:8' — at each STEP the fleet becomes N "
+                         "peers in place (survivors bit-exact, joiners "
+                         "bootstrap from the group mean, the train "
+                         "step re-jits for the new grid). Every N "
+                         "needs an exact grid; the whole schedule is "
+                         "validated at launch")
     ap.add_argument("--transport", default=None,
-                    choices=["sim", "vector_sim", "super_sim",
-                             "socket"],
                     help="MessagePlan executor backend "
                          "(runtime/transport_base.py): 'sim' models "
                          "messages over --link-profile links; "
@@ -138,6 +162,15 @@ def main(argv=None) -> int:
                          "socket transport); a peer whose send is "
                          "lost mid-round is demoted to receiver-only "
                          "for that step")
+    ap.add_argument("--peer-hosts", default=None, metavar="FILE",
+                    help="JSON address book for the socket transport "
+                         "(multi-host mode): fixed host:port per plan "
+                         "node plus the owning rank — this process "
+                         "runs only its --rank's nodes; start one "
+                         "process per rank with the same book")
+    ap.add_argument("--rank", type=int, default=0,
+                    help="this process's rank in the --peer-hosts "
+                         "world (default 0)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
@@ -146,10 +179,30 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.transport is not None:
+        from repro.runtime.transport_base import available_transports
+        names = available_transports()
+        if args.transport not in names:
+            ap.error(f"--transport must be one of {names}, "
+                     f"got {args.transport!r}")
+    resize_schedule = []
+    if args.resize_at:
+        try:
+            for part in args.resize_at.split(","):
+                step_s, n_s = part.split(":")
+                resize_schedule.append((int(step_s), int(n_s)))
+        except ValueError:
+            ap.error(f"--resize-at must be STEP:N[,STEP:N...], "
+                     f"got {args.resize_at!r}")
+    if args.peer_hosts and args.transport != "socket":
+        ap.error("--peer-hosts is the socket transport's address "
+                 "book; pass --transport socket")
+
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = Model(cfg)
-    grid = plan_grid(args.peers)
-    print(f"[train] arch={cfg.name} peers={args.peers} "
+    n_peers = args.peers
+    grid = plan_grid(n_peers)
+    print(f"[train] arch={cfg.name} peers={n_peers} "
           f"grid={grid.dims} params={cfg.param_count():,}")
 
     pipeline = build_pipeline("mar", grid, backend="device",
@@ -161,21 +214,21 @@ def main(argv=None) -> int:
     step_fn = jax.jit(make_fl_train_step(
         model, grid, lr=args.lr, pipeline=pipeline))
 
-    state = init_fl_state(model, args.peers, jax.random.PRNGKey(args.seed),
+    state = init_fl_state(model, n_peers, jax.random.PRNGKey(args.seed),
                           pipeline=pipeline)
     ledger = CommLedger()
     peer_model_bytes = (topology.pytree_bytes(state["params"])
                         + topology.pytree_bytes(state["momentum"])
-                        ) // args.peers
+                        ) // n_peers
     start = 0
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
     if ckpt and args.resume and ckpt.latest_step() is not None:
-        state, meta = ckpt.restore_elastic(args.peers, like=state)
+        state, meta = ckpt.restore_elastic(n_peers, like=state)
         start = meta.get("step", 0)
         print(f"[train] resumed from step {start} "
               f"(was {meta.get('n_peers')} peers)")
 
-    stream = lm_token_stream(cfg.vocab_size, args.peers * args.local_steps
+    stream = lm_token_stream(cfg.vocab_size, n_peers * args.local_steps
                              * args.batch, args.seq, seed=args.seed)
     # lifecycle: scenario masks + health heartbeats/sweeps + deadlines.
     # The lifecycle clock is the step counter, so --health-timeout is
@@ -186,10 +239,11 @@ def main(argv=None) -> int:
             ap.error("--churn trace requires --churn-trace FILE")
         churn_params["path"] = args.churn_trace
     lifecycle = build_lifecycle(
-        args.churn, args.peers, seed=args.seed,
+        args.churn, n_peers, seed=args.seed,
         participation_rate=args.participation,
         dropout_rate=args.dropout, churn_params=churn_params,
-        health=HealthTracker(args.peers, timeout_s=args.health_timeout),
+        schedule=resize_schedule,
+        health=HealthTracker(n_peers, timeout_s=args.health_timeout),
         straggler=StragglerPolicy())
     metrics_log = MetricsLogger(args.metrics)
     network = None
@@ -202,32 +256,35 @@ def main(argv=None) -> int:
             link_params["loss"] = args.link_loss
         if args.link_shuffle:
             link_params["shuffle"] = True
+        transport_kwargs = {}
+        if args.peer_hosts:
+            from repro.runtime.socket_transport import AddressBook
+            book = AddressBook.from_json(args.peer_hosts)
+            print(f"[train] address book: {book.n_nodes} nodes over "
+                  f"{book.world_size} ranks; this is rank {args.rank} "
+                  f"(owns nodes {list(book.owned(args.rank))})")
+            transport_kwargs["address_book"] = book
+            transport_kwargs["rank"] = args.rank
         network = build_transport(
-            transport, args.peers, profile=args.link_profile,
-            seed=args.seed, link_params=link_params or None)
+            transport, n_peers, profile=args.link_profile,
+            seed=args.seed, link_params=link_params or None,
+            **transport_kwargs)
     # the mask-free fast path needs a genuinely lossless transport too:
     # the regions profile carries per-tier loss even without --link-loss
     always_full = args.churn is None and args.participation >= 1.0 \
         and args.dropout <= 0.0 \
         and (network is None or network.lossless)
 
-    # launch-path validation: the device backend needs an exact grid,
-    # so permanent join/leave (trace events, schedules) cannot be
-    # honored mid-run — scan the whole planned step range NOW and fail
-    # fast with the split-and-resume recipe instead of burning compute
-    # until the tick fires (ISSUE 5 launch bugfix)
+    # launch-path validation: every planned permanent resize (schedule
+    # entries + trace join/leave) is honored mid-run through the
+    # MembershipChange contract, but the device backend needs an exact
+    # grid at every hop — chain-validate the whole step range NOW so an
+    # unreachable peer count fails at launch, not mid-run
     planned = lifecycle.planned_resizes(start, start + args.steps)
     if planned:
-        t0, n0 = planned[0]
-        raise SystemExit(
-            f"[train] the device backend needs an exact grid; the "
-            f"churn trace/schedule requests {len(planned)} permanent "
-            f"membership change(s) within steps "
-            f"{start}..{start + args.steps - 1} (first at step {t0}: "
-            f"{args.peers} -> {n0} peers). Split the run there: train "
-            f"--steps {max(t0 - start, 0)} now, then relaunch with "
-            f"--peers {n0} --resume (sim elastic regrouping: "
-            f"Federation.resize)")
+        validate_membership_schedule(grid, planned, exact_only=True)
+        print("[train] elastic schedule: " + ", ".join(
+            f"step {ts}: -> {n} peers" for ts, n in planned))
 
     controller = None
     if args.adaptive_m is not None:
@@ -263,20 +320,38 @@ def main(argv=None) -> int:
         placement_policy.bind_prober(run_probe)
 
     for t in range(start, start + args.steps):
+        tick = lifecycle.tick(t)
+        if tick.resize_to is not None and tick.resize_to != n_peers:
+            # permanent join/leave, in place: one MembershipChange from
+            # the unified contract — survivors bit-exact, joiners
+            # group-mean-bootstrapped, train step re-jitted for the new
+            # exact grid (validated at launch). No relaunch.
+            change = plan_membership_change(
+                grid, tick.resize_to, iteration=t, exact_only=True)
+            state, pipeline = apply_membership(state, change, pipeline)
+            grid, n_peers = change.new_plan, change.new_n
+            print(f"[train] elastic resize at step {t}: "
+                  f"{change.old_n} -> {change.new_n} peers, "
+                  f"grid={grid.dims} "
+                  f"(+{change.n_joiners} joiners)")
+            step_fn = jax.jit(make_fl_train_step(
+                model, grid, lr=args.lr, pipeline=pipeline))
+            stream = lm_token_stream(
+                cfg.vocab_size,
+                n_peers * args.local_steps * args.batch, args.seq,
+                seed=args.seed + t)
+            if network is not None:
+                network.resize(n_peers)
+            if controller is not None:
+                controller.rebind(grid)
+            if placement_policy is not None:
+                placement_policy.rebind(grid)
         raw = next(stream)
         batch = {
-            k: v.reshape(args.peers, args.local_steps, 1, args.batch,
+            k: v.reshape(n_peers, args.local_steps, 1, args.batch,
                          args.seq)
             for k, v in raw.items()
         }
-        tick = lifecycle.tick(t)
-        if tick.resize_to is not None:
-            # backstop only: planned_resizes() validated the whole step
-            # range at launch, so scheduled/trace resizes never get here
-            raise SystemExit(
-                "[train] the device backend needs an exact grid; "
-                "permanent join/leave requires relaunch + "
-                "--resume (sim elastic regrouping: Federation.resize)")
         u, a = tick.u, tick.a
         # modeled network: time this step's messages first so lost
         # sends demote their peer before the aggregation runs
@@ -344,9 +419,9 @@ def main(argv=None) -> int:
                                       peer_model_bytes)
             # heartbeat every peer that ran this step with its measured
             # duration; silent peers age toward the sweep timeout
-            lifecycle.observe_durations(t, np.full(args.peers, dt),
+            lifecycle.observe_durations(t, np.full(n_peers, dt),
                                         mask=u)
-        metrics_log.log(t + 1, tokens=args.peers * args.local_steps
+        metrics_log.log(t + 1, tokens=n_peers * args.local_steps
                         * args.batch * args.seq,
                         sim_s=(transcript.iteration_s
                                if transcript is not None else None),
@@ -356,17 +431,17 @@ def main(argv=None) -> int:
                    if transcript is not None else "")
             print(f"  step {t+1:4d} loss={float(metrics['loss']):.4f} "
                   f"({dt*1e3:.0f} ms){sim} "
-                  f"active={int(a.sum())}/{args.peers}")
+                  f"active={int(a.sum())}/{n_peers}")
         if ckpt and (t + 1) % args.ckpt_every == 0:
             ckpt.save(t + 1, state,
-                      metadata={"step": t + 1, "n_peers": args.peers,
+                      metadata={"step": t + 1, "n_peers": n_peers,
                                 "grid_dims": list(grid.dims),
                                 "arch": cfg.name},
                       blocking=False)
     if ckpt:
         ckpt.save(start + args.steps, state,
                   metadata={"step": start + args.steps,
-                            "n_peers": args.peers,
+                            "n_peers": n_peers,
                             "grid_dims": list(grid.dims),
                             "arch": cfg.name})
         ckpt.wait()
@@ -386,6 +461,8 @@ def main(argv=None) -> int:
             by_kind[e.kind] = by_kind.get(e.kind, 0) + len(e.peers)
         print("[train] membership events: " + " ".join(
             f"{k}={v}" for k, v in sorted(by_kind.items())))
+    if network is not None and hasattr(network, "close"):
+        network.close()   # book-mode sockets + background loop thread
     return 0
 
 

@@ -412,6 +412,21 @@ class Transport:
             tr.kd_bytes = float(sum(tr.bytes_by_round[:kd]))
 
 
+def available_transports() -> List[str]:
+    """Sorted names of every registered transport backend.
+
+    Imports the bundled implementations first so the registry is
+    populated (the same lazy import :func:`build_transport` does) —
+    CLI validation and error messages use this list, so a newly
+    registered backend shows up everywhere without edits.
+    """
+    # importing the implementations registers them; lazy to avoid the
+    # transport_base <-> network import cycle
+    from repro.runtime import (network, socket_transport,  # noqa: F401
+                               super_network, vector_network)
+    return sorted(TRANSPORTS)
+
+
 def build_transport(name: str, n_peers: int, *,
                     profile: Optional[str] = None, seed: int = 0,
                     link_params: Optional[Dict[str, Any]] = None,
@@ -424,15 +439,14 @@ def build_transport(name: str, n_peers: int, *,
     ``"sim"``); ``"super_sim"`` — the superpeer hybrid engine (closed
     forms for intra-cluster rounds, the vector engine for the rest;
     byte-exact always, time-equal on per-peer link profiles);
-    ``"socket"`` — real asyncio tasks over loopback TCP.
+    ``"socket"`` — real asyncio tasks over loopback TCP (or, with an
+    ``address_book=``/``rank=``, one rank of a multi-process world on
+    fixed host:port endpoints).
     """
-    # importing the implementations registers them; lazy to avoid the
-    # transport_base <-> network import cycle
-    from repro.runtime import (network, socket_transport,  # noqa: F401
-                               super_network, vector_network)
+    names = available_transports()
     if name not in TRANSPORTS:
         raise ValueError(f"unknown transport {name!r}; "
-                         f"registered: {sorted(TRANSPORTS)}")
+                         f"registered: {names}")
     return TRANSPORTS[name].from_config(
         n_peers, profile=profile, seed=seed, link_params=link_params,
         **kwargs)

@@ -1,0 +1,363 @@
+"""The unified elastic-membership contract (core/replan.py, DESIGN.md
+§16): one MembershipChange from lifecycle signal to device backend, and
+the SocketTransport address-book (multi-host) mode it rewires.
+"""
+import json
+import os
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import build_pipeline
+from repro.core.moshpit import GridPlan, plan_grid
+from repro.core.replan import (MembershipChange, plan_membership_change,
+                               regroup_change, resize_peer_axis,
+                               resize_state_tree, select_survivors,
+                               validate_membership_schedule)
+
+
+# ---------------------------------------------------------------------------
+# the contract itself
+# ---------------------------------------------------------------------------
+
+def test_plan_membership_change_replans_grid():
+    change = plan_membership_change(plan_grid(16), 9, iteration=7)
+    assert change.old_n == 16 and change.new_n == 9
+    assert tuple(change.new_plan.dims) == (3, 3)
+    assert change.new_plan.is_exact
+    assert change.iteration == 7
+    assert change.survivors == tuple(range(9))
+    assert change.contiguous and change.n_joiners == 0
+
+    grow = plan_membership_change(plan_grid(8), 12)
+    assert tuple(grow.new_plan.dims) == (3, 2, 2)
+    assert grow.n_joiners == 4 and grow.survivors == tuple(range(8))
+
+
+def test_plan_membership_change_exact_only():
+    # 10 has no exact grid (best factorization caps at 12)
+    with pytest.raises(ValueError, match="no exact grid for 10"):
+        plan_membership_change(plan_grid(8), 10, exact_only=True)
+    # without the constraint the inexact plan is allowed (sim backend)
+    change = plan_membership_change(plan_grid(8), 10)
+    assert change.new_n == 10
+
+
+def test_membership_change_validates_survivors():
+    plan = plan_grid(4)
+    with pytest.raises(ValueError):
+        MembershipChange(old_n=6, new_n=4, new_plan=plan,
+                         survivors=(0, 1, 2, 6))      # 6 not an old id
+    with pytest.raises(ValueError):
+        MembershipChange(old_n=6, new_n=4, new_plan=plan,
+                         survivors=(0, 1, 2, 2))      # duplicate
+    with pytest.raises(ValueError):
+        MembershipChange(old_n=6, new_n=4, new_plan=plan,
+                         survivors=(0, 1, 2, 3, 4))   # > new_n
+
+
+def test_apply_to_tree_shrink_is_bit_exact():
+    rng = np.random.default_rng(0)
+    tree = {"w": jnp.asarray(rng.normal(size=(16, 5)), jnp.float32)}
+    change = plan_membership_change(plan_grid(16), 9)
+    out = change.apply_to_tree(tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"])[:9])
+
+
+def test_apply_to_tree_grow_bootstraps_joiners_from_mean():
+    rng = np.random.default_rng(1)
+    tree = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)}
+    change = plan_membership_change(plan_grid(8), 12)
+    out = change.apply_to_tree(tree)
+    np.testing.assert_array_equal(np.asarray(out["w"])[:8],
+                                  np.asarray(tree["w"]))
+    mean = np.asarray(tree["w"]).mean(0)
+    for j in range(8, 12):
+        np.testing.assert_allclose(np.asarray(out["w"])[j], mean,
+                                   rtol=1e-6)
+
+
+def test_apply_to_tree_non_contiguous_survivors():
+    rng = np.random.default_rng(2)
+    tree = {"w": jnp.asarray(rng.normal(size=(6, 3)), jnp.float32)}
+    change = MembershipChange(old_n=6, new_n=4, new_plan=plan_grid(4),
+                              survivors=(0, 2, 3, 5))
+    assert not change.contiguous
+    out = change.apply_to_tree(tree)
+    np.testing.assert_array_equal(
+        np.asarray(out["w"]), np.asarray(tree["w"])[[0, 2, 3, 5]])
+
+
+def test_select_survivors_contiguous_fast_path():
+    x = jnp.arange(12.0).reshape(6, 2)
+    got = select_survivors({"x": x}, 6, (0, 1, 2))
+    np.testing.assert_array_equal(np.asarray(got["x"]),
+                                  np.asarray(x)[:3])
+
+
+def test_resize_state_tree_zero_keys():
+    own = {"err": jnp.ones((4, 3)), "scale": jnp.full((4,), 2.0)}
+    out = resize_state_tree(own, 4, 6, zero_keys=("err",))
+    np.testing.assert_array_equal(np.asarray(out["err"])[4:],
+                                  np.zeros((2, 3)))
+    np.testing.assert_allclose(np.asarray(out["scale"])[4:],
+                               np.full((2,), 2.0))
+
+
+def test_validate_membership_schedule_chains_plans():
+    # 16 -> 9 -> 12 are all exact: fine
+    validate_membership_schedule(plan_grid(16), [(3, 9), (7, 12)])
+    # the second hop lands on 10 (inexact): the error names the step
+    with pytest.raises(ValueError, match="step 7"):
+        validate_membership_schedule(plan_grid(16), [(3, 9), (7, 10)])
+
+
+def test_regroup_change_same_n():
+    old = plan_grid(4)
+    new = GridPlan(4, (4,))
+    change = regroup_change(old, new)
+    assert change.same_n and change.n_joiners == 0
+    with pytest.raises(ValueError):
+        regroup_change(old, plan_grid(9))
+
+
+# ---------------------------------------------------------------------------
+# per-stage wire-state semantics through the contract
+# ---------------------------------------------------------------------------
+
+def _pipe_pipelines(n, dims):
+    plan = GridPlan(n, dims)
+    kwargs = dict(async_aggregation=True, use_dp=True,
+                  compress="int8_ef", noise_multiplier=0.0)
+    return (build_pipeline("mar", plan, backend="device", **kwargs),
+            build_pipeline("mar", plan, **kwargs))
+
+
+def test_stage_roundtrip_16_12_16_device_matches_sim():
+    """Shrink-then-regrow through every wire stage (async/dp/int8_ef):
+    the device-backend pipeline applies the same per-stage rules as the
+    sim pipeline — survivors' wire state rides bit-exact, joiners get
+    the stage's bootstrap (EF residuals zero, DP markers zero, async
+    buffers mean)."""
+    dev, sim = _pipe_pipelines(16, (2, 2, 2, 2))
+    rng = np.random.default_rng(3)
+    leaves = {"p": {"w": jnp.asarray(rng.normal(size=(16, 5)),
+                                     jnp.float32)}}
+    pipe16 = dev.init_state(leaves)
+    # put recognizable non-zero wire state everywhere
+    pipe16 = jax.tree.map(
+        lambda x: x + jnp.arange(x.shape[0], dtype=x.dtype).reshape(
+            (-1,) + (1,) * (x.ndim - 1)) if x.ndim else x, pipe16)
+    d12 = dev.resize_state(pipe16, 16, 12)
+    s12 = sim.resize_state(pipe16, 16, 12)
+    for a, b in zip(jax.tree.leaves(d12), jax.tree.leaves(s12)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # shrink is a pure prefix slice on every peer-stacked stage leaf
+    # (scalar leaves — DP clip, async counters — carry over untouched)
+    for before, after in zip(jax.tree.leaves(pipe16),
+                             jax.tree.leaves(d12)):
+        b, a = np.asarray(before), np.asarray(after)
+        np.testing.assert_array_equal(b[:12] if b.ndim else b, a)
+    # regrow: survivors exact, EF residuals of joiners zero
+    d16 = dev.resize_state(d12, 12, 16)
+    for mid, back in zip(jax.tree.leaves(d12), jax.tree.leaves(d16)):
+        m, k = np.asarray(mid), np.asarray(back)
+        np.testing.assert_array_equal(m, k[:12] if k.ndim else k)
+    err16 = d16["int8_ef"]["err"]["w"]
+    np.testing.assert_array_equal(np.asarray(err16)[12:],
+                                  np.zeros((4, 5)))
+    dp16 = d16["dp"]["has_delta"]
+    np.testing.assert_array_equal(np.asarray(dp16)[12:], np.zeros(4))
+
+
+# ---------------------------------------------------------------------------
+# device backend: mid-run membership through the contract
+# ---------------------------------------------------------------------------
+
+class _ToyModel:
+    """Duck-typed stand-in for models.model.Model: linear regression."""
+
+    def __init__(self, dim=3):
+        self.dim = dim
+
+    def init(self, key):
+        return {"w": jax.random.normal(key, (self.dim,), jnp.float32)}
+
+    def loss(self, params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean(jnp.square(pred - batch["y"]))
+
+
+def _toy_batch(n, rng):
+    return {
+        "x": jnp.asarray(rng.normal(size=(n, 2, 1, 8, 3)), jnp.float32),
+        "y": jnp.asarray(rng.normal(size=(n, 2, 1, 8)), jnp.float32),
+    }
+
+
+def test_device_apply_membership_mid_run():
+    """Scheduled shrink+grow on the device backend, no relaunch: state
+    maps through the contract, the step re-jits for each new exact
+    grid, and training continues."""
+    from repro.core.fl_device import (apply_membership, init_fl_state,
+                                      make_fl_train_step)
+    model = _ToyModel()
+    grid = GridPlan(4, (2, 2))
+    pipeline = build_pipeline("mar", grid, backend="device",
+                              compress="int8_ef")
+    state = init_fl_state(model, 4, jax.random.PRNGKey(0),
+                          pipeline=pipeline)
+    step = jax.jit(make_fl_train_step(model, grid, lr=0.05,
+                                      pipeline=pipeline))
+    rng = np.random.default_rng(0)
+    state, _ = step(state, _toy_batch(4, rng))
+
+    # grow 4 -> 6 (exact grid (3, 2))
+    change = plan_membership_change(grid, 6, iteration=1,
+                                    exact_only=True)
+    before = np.asarray(state["params"]["w"])
+    state, pipeline = apply_membership(state, change, pipeline)
+    grid = change.new_plan
+    assert grid.is_exact and grid.n_peers == 6
+    got = np.asarray(state["params"]["w"])
+    np.testing.assert_array_equal(got[:4], before)        # survivors
+    np.testing.assert_allclose(
+        got[4:], np.broadcast_to(before.mean(0), (2, 3)),
+        rtol=1e-6)                                         # joiners
+    step = jax.jit(make_fl_train_step(model, grid, lr=0.05,
+                                      pipeline=pipeline))
+    state, metrics = step(state, _toy_batch(6, rng))
+    assert bool(jnp.isfinite(metrics["loss"]))
+
+    # shrink 6 -> 4: survivors bit-exact again, next step still runs
+    change = plan_membership_change(grid, 4, iteration=2,
+                                    exact_only=True)
+    before = np.asarray(state["params"]["w"])
+    state, pipeline = apply_membership(state, change, pipeline)
+    grid = change.new_plan
+    np.testing.assert_array_equal(np.asarray(state["params"]["w"]),
+                                  before[:4])
+    step = jax.jit(make_fl_train_step(model, grid, lr=0.05,
+                                      pipeline=pipeline))
+    state, metrics = step(state, _toy_batch(4, rng))
+    assert bool(jnp.isfinite(metrics["loss"]))
+
+
+def test_device_apply_membership_checks_old_n():
+    from repro.core.fl_device import apply_membership, init_fl_state
+    state = init_fl_state(_ToyModel(), 4, jax.random.PRNGKey(0))
+    change = plan_membership_change(plan_grid(6), 4)
+    with pytest.raises(ValueError, match="planned for 6"):
+        apply_membership(state, change)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint restore across a peer-axis mismatch
+# ---------------------------------------------------------------------------
+
+def test_checkpointer_restore_remaps_peer_axis(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    rng = np.random.default_rng(4)
+    saved = {"params": {"w": jnp.asarray(rng.normal(size=(4, 3)),
+                                         jnp.float32)},
+             "step": jnp.zeros((), jnp.int32)}
+    ckpt = Checkpointer(os.fspath(tmp_path))
+    ckpt.save(10, saved, metadata={"step": 10, "n_peers": 4})
+    like = {"params": {"w": jnp.zeros((6, 3), jnp.float32)},
+            "step": jnp.zeros((), jnp.int32)}
+    tree, meta = ckpt.restore(like=like)
+    got = np.asarray(tree["params"]["w"])
+    np.testing.assert_array_equal(got[:4],
+                                  np.asarray(saved["params"]["w"]))
+    np.testing.assert_allclose(
+        got[4:],
+        np.broadcast_to(np.asarray(saved["params"]["w"]).mean(0),
+                        (2, 3)), rtol=1e-6)
+    assert meta["n_peers"] == 4
+
+
+# ---------------------------------------------------------------------------
+# the transport registry + address book
+# ---------------------------------------------------------------------------
+
+def test_build_transport_unknown_name_lists_registry():
+    from repro.runtime.transport_base import (available_transports,
+                                              build_transport)
+    names = available_transports()
+    assert {"sim", "socket", "vector_sim", "super_sim"} <= set(names)
+    with pytest.raises(ValueError, match="registered"):
+        build_transport("quantum_tunnel", 4)
+
+
+def test_address_book_json_roundtrip(tmp_path):
+    from repro.runtime.socket_transport import AddressBook
+    book = AddressBook(hosts=("10.0.0.1", "10.0.0.2"),
+                       ports=(9101, 9101), ranks=(0, 1))
+    path = os.fspath(tmp_path / "book.json")
+    book.to_json(path)
+    assert AddressBook.from_json(path) == book
+    # compact string entries parse too
+    doc = {"nodes": ["10.0.0.1:9101:0", "10.0.0.2:9101"]}
+    got = AddressBook.from_dict(doc)
+    assert got.hosts == ("10.0.0.1", "10.0.0.2")
+    assert got.ranks == (0, 0)
+    assert book.world_size == 2 and book.owned(1) == (1,)
+
+
+def test_socket_book_resize_rejects_growth_past_book():
+    from repro.runtime.socket_transport import (AddressBook,
+                                                SocketTransport)
+    book = AddressBook.loopback(4, world_size=1)
+    t = SocketTransport(4, address_book=book, rank=0)
+    t.resize(3)               # shrink: fine, survivors keep endpoints
+    with pytest.raises(ValueError, match="extend the book"):
+        t.resize(5)
+    with pytest.raises(ValueError, match="extend"):
+        SocketTransport(6, address_book=book, rank=0)
+
+
+def test_socket_two_rank_book_byte_exact_vs_sim():
+    """Two SocketTransport ranks (own event loops, cross-rank TCP on
+    fixed book ports) merge byte-exact vs the simulator — the in-process
+    version of the two-process calibration gate."""
+    from repro.core.transport import build_message_plan
+    from repro.runtime.network import NetworkSim
+    from repro.runtime.socket_transport import (AddressBook,
+                                                SocketTransport,
+                                                merge_transcripts)
+    n = 4
+    grid = plan_grid(n)
+    plans = [build_message_plan(t, grid, None, 1000.0)
+             for t in ("mar", "ar", "fedavg")]
+    n_nodes = max(max(p.n_nodes for p in plans), n)
+    book = AddressBook.loopback(n_nodes, world_size=2)
+    t0 = SocketTransport(n, seed=0, address_book=book, rank=0)
+    t1 = SocketTransport(n, seed=0, address_book=book, rank=1)
+    sim = NetworkSim.from_config(n, profile="uniform", seed=0)
+    try:
+        for p in plans:
+            with ThreadPoolExecutor(2) as ex:
+                parts = [ex.submit(t0.run, p), ex.submit(t1.run, p)]
+                merged = merge_transcripts([f.result() for f in parts])
+            ref = sim.run(p)
+            assert merged.total_bytes == ref.total_bytes
+            assert merged.bytes_by_round == ref.bytes_by_round
+            assert merged.bytes_by_link == ref.bytes_by_link
+            assert merged.n_messages == ref.n_messages
+    finally:
+        t0.close()
+        t1.close()
+
+
+def test_resize_peer_axis_reexport_unchanged():
+    # the historical import path still works (aggregation re-exports)
+    from repro.core.aggregation import resize_peer_axis as via_agg
+    assert via_agg is resize_peer_axis
+    x = {"w": jnp.arange(8.0).reshape(4, 2)}
+    out = resize_peer_axis(x, 4, 2)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.arange(4.0).reshape(2, 2))
